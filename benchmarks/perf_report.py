@@ -1,0 +1,118 @@
+"""§Perf report: corrected roofline terms for every hillclimb variant.
+
+Correction recap (see launch/roofline.py): layer-scan probe correction plus
+an over-decomposition factor — with od microbatches the whole fwd+bwd lives
+inside a scan body XLA counts once, so
+
+    corrected_od = od · (corrected_layers − probe0) + probe0
+"""
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from repro.configs import SHAPES_BY_NAME, get_config  # noqa: E402
+from repro.launch import roofline as R  # noqa: E402
+
+HILL = os.path.join(REPO, "benchmarks", "results", "hillclimb")
+DRY = os.path.join(REPO, "benchmarks", "results", "dryrun")
+
+CELLS = {
+    ("gemma3_27b", "train_4k"):
+        ["baseline", "od2", "od4", "dots", "dots_sp", "dots_sp_od4",
+         "sp", "sp_od4", "sp_od8"],
+    ("pixtral_12b", "decode_32k"): ["baseline", "kvseq_model"],
+    ("mamba2_370m", "train_4k"):
+        ["baseline", "dots", "ssd_chunk128", "ssd_chunk128_dots_sp"],
+    ("yi_9b", "decode_32k"): ["baseline", "kvseq_model"],
+    ("phi4_mini_3_8b", "decode_32k"): ["baseline", "kvseq_model"],
+    ("llama4_scout_17b_a16e", "decode_32k"): ["baseline", "kvseq_model"],
+    ("whisper_large_v3", "decode_32k"): ["baseline", "kvseq_model"],
+}
+
+OD = {"od2": 2, "od4": 4, "od8": 8, "dots_sp_od4": 4, "dots_sp_od8": 8,
+      "sp_od4": 4, "sp_od8": 8}
+REMAT = {"dots": "dots", "dots_sp": "dots", "dots_sp_od4": "dots",
+         "dots_sp_od8": "dots", "ssd_chunk128_dots_sp": "dots"}
+
+
+def load(arch, shape, variant, probe=None):
+    if variant == "baseline":
+        tag = f"{arch}__{shape}__pod1__baseline"
+        if probe is not None:
+            tag += f"__probe{probe}"
+        path = os.path.join(DRY, tag + ".json")
+    else:
+        tag = f"{arch}__{shape}__{variant}"
+        if probe is not None:
+            tag += f"__probe{probe}"
+        path = os.path.join(HILL, tag + ".json")
+    if not os.path.exists(path):
+        return None
+    d = json.load(open(path))
+    return None if "error" in d else d
+
+
+def analyze(arch, shape, variant):
+    full = load(arch, shape, variant)
+    if full is None:
+        return None
+    p0 = load(arch, shape, variant, 0)
+    p1 = load(arch, shape, variant, 1)
+    cfg = get_config(arch)
+    sh = SHAPES_BY_NAME[shape]
+    chips = full["chips"]
+    hlo = R.corrected_hlo(full, p0, p1, cfg)
+    od = OD.get(variant, 1)
+    if od > 1 and p0 is not None:
+        for key in ("flops_per_device", "bytes_per_device",
+                    "collective_total_bytes"):
+            base = p0.get(key, 0.0) or 0.0
+            hlo[key] = od * (hlo[key] - base) + base
+    remat = REMAT.get(variant, "full")
+    ana = R.analytic_total_flops(cfg, sh, remat) / chips
+    hbm = hlo["bytes_per_device"] + R.flash_scan_bytes_correction(
+        cfg, sh, chips)
+    coll = hlo["collective_total_bytes"]
+    terms = {"compute": ana / R.PEAK_FLOPS, "memory": hbm / R.HBM_BW,
+             "collective": coll / R.ICI_BW}
+    bound = max(terms.values())
+    return {
+        "variant": variant, "t_compute_ms": terms["compute"] * 1e3,
+        "t_memory_ms": terms["memory"] * 1e3,
+        "t_collective_ms": terms["collective"] * 1e3,
+        "bottleneck": max(terms, key=terms.get),
+        "roofline_pct": 100 * terms["compute"] / bound,
+        "temp_GB": (full.get("temp_size_in_bytes") or 0) / 1e9,
+        "hbm_GB": hbm / 1e9, "coll_GB": coll / 1e9,
+    }
+
+
+def main():
+    out = {}
+    for (arch, shape), variants in CELLS.items():
+        print(f"\n== {arch} × {shape} ==")
+        print(f"{'variant':22s} {'compute':>9s} {'memory':>10s} "
+              f"{'coll':>9s} {'bneck':>10s} {'roofl%':>7s} {'temp':>7s}")
+        rows = []
+        for v in variants:
+            r = analyze(arch, shape, v)
+            if r is None:
+                print(f"{v:22s}  (missing)")
+                continue
+            rows.append(r)
+            print(f"{r['variant']:22s} {r['t_compute_ms']:7.1f}ms "
+                  f"{r['t_memory_ms']:8.1f}ms {r['t_collective_ms']:7.1f}ms "
+                  f"{r['bottleneck']:>10s} {r['roofline_pct']:6.1f}% "
+                  f"{r['temp_GB']:5.1f}GB")
+        out[f"{arch}__{shape}"] = rows
+    path = os.path.join(REPO, "benchmarks", "results", "perf_report.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"\nwrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""Paper Fig. 10–12 — ping-pong latency/bandwidth between two ranks.
+
+Paths measured per message size (8B – 8MB):
+  raw          hand-written copy loop (the MPI+CUDA analogue)
+  prema_send   hetero_object handler send (two-phase metadata+payload,
+               host-staged; small messages inline — §4.2.3)
+  prema_put    remote put into preallocated memory (§4.2.4)
+The 'direct' variant models a device-aware interconnect by skipping the
+host-staging copy (paper Fig. 11/12).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import Runtime, RuntimeConfig
+from repro.distributed import Cluster, handler
+
+_pong_evt = threading.Event()
+
+
+@handler(name="bench_pong")
+def _pong(ctx, obj):
+    ctx.send(ctx.message.src, "bench_done", obj)
+
+
+@handler(name="bench_done")
+def _done(ctx, obj):
+    _pong_evt.set()
+
+
+@handler(name="bench_put_ack")
+def _put_ack(ctx, obj):
+    _pong_evt.set()
+
+
+def bench_prema_send(cluster: Cluster, nbytes: int, iters: int,
+                     path: str = "host") -> float:
+    n = max(nbytes // 4, 1)
+    rt0 = cluster.ranks[0].runtime
+    lat = []
+    for _ in range(iters):
+        obj = rt0.hetero_object(np.zeros((n,), np.float32))
+        _pong_evt.clear()
+        t0 = time.perf_counter()
+        cluster.ranks[0].send(1, "bench_pong", obj, path=path)
+        _pong_evt.wait(30)
+        lat.append((time.perf_counter() - t0) / 2)   # one-way
+    return float(np.median(lat))
+
+
+def bench_prema_put(cluster: Cluster, nbytes: int, iters: int) -> float:
+    n = max(nbytes // 4, 1)
+    rt0, rt1 = cluster.ranks[0].runtime, cluster.ranks[1].runtime
+    target = rt1.hetero_object(np.zeros((n,), np.float32))
+    cluster.ranks[1].register_object("bench_tgt", target)
+    src = rt0.hetero_object(np.ones((n,), np.float32))
+    lat = []
+    for _ in range(iters):
+        _pong_evt.clear()
+        t0 = time.perf_counter()
+        cluster.ranks[0].put(1, "bench_tgt", src, on_done="bench_put_ack")
+        _pong_evt.wait(30)
+        lat.append(time.perf_counter() - t0)
+    return float(np.median(lat))
+
+
+def bench_raw(nbytes: int, iters: int) -> float:
+    """Hand-written transfer round trip (MPI+CUDA analogue). On this CPU
+    container device==host, so jax.device_put can alias; the explicit
+    .copy() calls stand in for the D2H / NIC / H2D byte movement a real
+    MPI+CUDA ping-pong performs."""
+    import jax
+    n = max(nbytes // 4, 1)
+    buf = np.zeros((n,), np.float32)
+    lat = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        dev = jax.device_put(buf)
+        back = np.array(dev)              # D2H copy
+        dev2 = jax.device_put(back.copy())  # network + H2D copy
+        dev2.block_until_ready()
+        lat.append((time.perf_counter() - t0) / 2)
+    return float(np.median(lat))
+
+
+SIZES = (8, 64, 256, 1024, 8192, 65536, 1 << 20, 8 << 20)
+
+
+def run(iters: int = 20) -> List[Dict]:
+    rows = []
+    with Cluster(2, RuntimeConfig(memory_capacity=1 << 30)) as cluster:
+        for nbytes in SIZES:
+            it = iters if nbytes < (1 << 20) else max(iters // 4, 3)
+            r = {"bytes": nbytes,
+                 "raw_us": bench_raw(nbytes, it) * 1e6,
+                 "send_us": bench_prema_send(cluster, nbytes, it) * 1e6,
+                 "direct_us": bench_prema_send(cluster, nbytes, it,
+                                               path="direct") * 1e6,
+                 "put_us": bench_prema_put(cluster, nbytes, it) * 1e6}
+            r["send_vs_raw"] = r["send_us"] / r["raw_us"]
+            r["direct_vs_send"] = r["send_us"] / r["direct_us"]
+            r["put_vs_raw"] = r["put_us"] / r["raw_us"]
+            r["put_bw_MBs"] = nbytes / r["put_us"] * 1e6 / 1e6
+            rows.append(r)
+    return rows
+
+
+def main():
+    print("name,us_per_call,derived")
+    for r in run():
+        print(f"fig10_raw_{r['bytes']},{r['raw_us']:.1f},")
+        print(f"fig10_send_{r['bytes']},{r['send_us']:.1f},"
+              f"x{r['send_vs_raw']:.2f}")
+        print(f"fig11_direct_{r['bytes']},{r['direct_us']:.1f},"
+              f"hostvsdirect_x{r['direct_vs_send']:.2f}")
+        print(f"fig10_put_{r['bytes']},{r['put_us']:.1f},"
+              f"x{r['put_vs_raw']:.2f};{r['put_bw_MBs']:.0f}MB/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Benchmark harness entry point — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (stdout), mirroring:
+  Fig. 8   tasking-framework optimization ladder (tasking_overhead)
+  Fig. 9   multi-device scaling (multidevice_scaling)
+  Fig. 10–12  ping-pong latency/bandwidth (pingpong)
+  Fig. 13/15  Jacobi3D scaling + over-decomposition (jacobi_scaling)
+plus a summary of the multi-pod dry-run + roofline table (reads the JSONs
+produced by benchmarks/run_dryrun_sweep.py — run that first for fresh data).
+"""
+import json
+import glob
+import os
+import sys
+import traceback
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+sys.path.insert(0, os.path.join(os.path.dirname(HERE), "src"))
+sys.path.insert(0, os.path.dirname(HERE))
+
+
+def _section(title):
+    print(f"# --- {title} ---", flush=True)
+
+
+def main() -> None:
+    from benchmarks import (jacobi_scaling, multidevice_scaling, pingpong,
+                            tasking_overhead)
+
+    sections = [
+        ("fig8 tasking overhead ladder", tasking_overhead.main),
+        ("fig9 multi-device scaling", multidevice_scaling.main),
+        ("fig10-12 pingpong", pingpong.main),
+        ("fig13/15 jacobi scaling + over-decomposition", jacobi_scaling.main),
+    ]
+    failures = []
+    for title, fn in sections:
+        _section(title)
+        try:
+            fn()
+        except Exception as e:   # keep the harness running
+            failures.append(title)
+            print(f"SECTION_FAILED {title}: {e}", flush=True)
+            traceback.print_exc()
+
+    _section("dry-run / roofline summary")
+    for f in sorted(glob.glob(os.path.join(HERE, "results", "dryrun",
+                                           "*.json"))):
+        with open(f) as fh:
+            d = json.load(fh)
+        if d.get("probe") is not None or d.get("skipped"):
+            continue
+        if "error" in d:
+            print(f"dryrun_{os.path.basename(f)},,ERROR")
+            continue
+        pods = "pod2" if "pod" in d.get("mesh", {}) else "pod1"
+        print(f"dryrun_{d['arch']}__{d['shape']}__{pods},"
+              f"{d.get('compile_s', '')},"
+              f"bottleneck={d.get('bottleneck')};chips={d.get('chips')}")
+    if failures:
+        print(f"# failed sections: {failures}", flush=True)
+        sys.exit(1)
+    print("# all benchmark sections completed", flush=True)
+
+
+if __name__ == '__main__':
+    main()

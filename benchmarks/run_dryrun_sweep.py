@@ -1,0 +1,91 @@
+"""Sequential dry-run sweep: every (arch × shape) cell on the single-pod mesh
+(+ optionally multi-pod), each in an isolated subprocess. Failures are
+recorded and the sweep continues. Results land in benchmarks/results/dryrun/.
+"""
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_DIR = os.path.join(REPO, "benchmarks", "results", "dryrun")
+
+
+def cells():
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    from repro.configs import ARCH_IDS, get_config, shapes_for
+    out = []
+    for arch in ARCH_IDS:
+        for shape in shapes_for(get_config(arch)):
+            out.append((arch, shape.name))
+    return out
+
+
+def run_cell(arch, shape, multi_pod, opt_level, timeout=3600, probe=None):
+    tag = f"{arch}__{shape}__{'pod2' if multi_pod else 'pod1'}__{opt_level}"
+    if probe is not None:
+        tag += f"__probe{probe}"
+    out_path = os.path.join(OUT_DIR, tag + ".json")
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            data = json.load(f)
+        if "error" not in data:
+            print(f"SKIP (cached) {tag}", flush=True)
+            return
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--opt-level", opt_level, "--out", out_path]
+    if probe is not None:
+        cmd += ["--probe", str(probe)]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    t0 = time.time()
+    try:
+        proc = subprocess.run(cmd, capture_output=True, text=True,
+                              timeout=timeout, env=env, cwd=REPO)
+        ok = proc.returncode == 0
+        if not ok:
+            err = (proc.stderr or "")[-3000:]
+            with open(out_path, "w") as f:
+                json.dump({"arch": arch, "shape": shape,
+                           "multi_pod": multi_pod, "opt_level": opt_level,
+                           "error": err}, f, indent=2)
+        print(f"{'OK  ' if ok else 'FAIL'} {tag}  ({time.time()-t0:.0f}s)",
+              flush=True)
+    except subprocess.TimeoutExpired:
+        with open(out_path, "w") as f:
+            json.dump({"arch": arch, "shape": shape, "multi_pod": multi_pod,
+                       "opt_level": opt_level, "error": "timeout"}, f)
+        print(f"TIME {tag}", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="also run the 2-pod mesh")
+    ap.add_argument("--only-multi-pod", action="store_true")
+    ap.add_argument("--opt-level", default="baseline")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--probes", action="store_true",
+                    help="also run 0-layer/1-period probe lowerings")
+    args = ap.parse_args()
+    os.makedirs(OUT_DIR, exist_ok=True)
+    todo = cells()
+    if args.arch:
+        todo = [(a, s) for a, s in todo if a == args.arch]
+    for arch, shape in todo:
+        if not args.only_multi_pod:
+            run_cell(arch, shape, False, args.opt_level)
+            if args.probes:
+                run_cell(arch, shape, False, args.opt_level, probe=0)
+                run_cell(arch, shape, False, args.opt_level, probe=1)
+        if args.multi_pod or args.only_multi_pod:
+            run_cell(arch, shape, True, args.opt_level)
+    print("sweep done", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,117 @@
+"""Paper Fig. 8 — heterogeneous tasking framework optimization ladder.
+
+Matrix-multiply benchmark over the runtime with optimizations applied
+incrementally, normalized against a direct jit call (the "CUDA baseline"
+analogue — no runtime, hand-managed buffers). Reports throughput
+(iterations/s) per matrix size and the ratio to the baseline.
+
+Ladder (paper §4.1):
+  TF-Baseline    fresh jit per launch, sync dispatch, no pools
+  TF-PageLocked  + staging-buffer pool (page-locked analogue)
+  TF-CustomAlloc + jit cache & buffer donation (custom allocator analogue)
+  TF-TPools      + request/future pools
+  TF-TferQueue   + dedicated transfer thread
+  TF-MultQueue   + multiple in-flight launches (multi-stream analogue)
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import Runtime, RuntimeConfig
+
+LADDER = [
+    ("TF-Baseline", dict(staging_pool=False, cache_jit=False,
+                         request_pool=False, transfer_thread=False,
+                         inflight=1, sync_dispatch=True)),
+    ("TF-PageLocked", dict(staging_pool=True, cache_jit=False,
+                           request_pool=False, transfer_thread=False,
+                           inflight=1, sync_dispatch=True)),
+    ("TF-CustomAlloc", dict(staging_pool=True, cache_jit=True,
+                            request_pool=False, transfer_thread=False,
+                            inflight=1, sync_dispatch=True)),
+    ("TF-TPools", dict(staging_pool=True, cache_jit=True, request_pool=True,
+                       transfer_thread=False, inflight=1,
+                       sync_dispatch=True)),
+    ("TF-TferQueue", dict(staging_pool=True, cache_jit=True,
+                          request_pool=True, transfer_thread=True,
+                          inflight=1, sync_dispatch=True)),
+    ("TF-MultQueue", dict(staging_pool=True, cache_jit=True,
+                          request_pool=True, transfer_thread=True,
+                          inflight=4, sync_dispatch=False)),
+]
+
+
+def dgemm(a, b, c):
+    return (a @ b).astype(c.dtype)
+
+
+def bench_config(name: str, overrides: Dict, n: int, iters: int) -> float:
+    """Each iteration re-creates inputs (allocate, transfer, compute) like the
+    paper's benchmark. Returns iterations/s."""
+    import jax
+    with Runtime(RuntimeConfig(memory_capacity=1 << 30, **overrides)) as rt:
+        host_a = np.random.rand(n, n).astype(np.float32)
+        host_b = np.random.rand(n, n).astype(np.float32)
+        # warmup (compile)
+        A = rt.hetero_object(host_a)
+        B = rt.hetero_object(host_b)
+        C = rt.hetero_object(shape=(n, n), dtype=np.float32)
+        rt.run(dgemm, [(A, "r"), (B, "r"), (C, "w")])
+        rt.barrier()
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            A = rt.hetero_object(host_a)
+            B = rt.hetero_object(host_b)
+            C = rt.hetero_object(shape=(n, n), dtype=np.float32)
+            rt.run(dgemm, [(A, "r"), (B, "r"), (C, "w")])
+        rt.barrier(timeout=600)
+        dt = time.perf_counter() - t0
+    return iters / dt
+
+
+def bench_direct(n: int, iters: int) -> float:
+    """Direct jit + device_put: the MPI+CUDA-style hand-written baseline."""
+    import jax
+    import jax.numpy as jnp
+    f = jax.jit(lambda a, b: a @ b)
+    host_a = np.random.rand(n, n).astype(np.float32)
+    host_b = np.random.rand(n, n).astype(np.float32)
+    f(jnp.asarray(host_a), jnp.asarray(host_b)).block_until_ready()
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(iters):
+        a = jax.device_put(host_a)
+        b = jax.device_put(host_b)
+        out = f(a, b)
+    out.block_until_ready()
+    return iters / (time.perf_counter() - t0)
+
+
+def run(sizes=(64, 128, 256, 512), iters=60) -> List[Dict]:
+    rows = []
+    for n in sizes:
+        base = bench_direct(n, iters)
+        row = {"size": n, "direct_its": round(base, 1)}
+        for name, overrides in LADDER:
+            its = bench_config(name, overrides, n, iters)
+            row[name] = round(its, 1)
+            row[name + "_vs_direct"] = round(its / base, 3)
+        rows.append(row)
+    return rows
+
+
+def main():
+    print("name,us_per_call,derived")
+    for row in run():
+        n = row["size"]
+        for name, _ in LADDER:
+            us = 1e6 / row[name]
+            print(f"fig8_{name}_{n},{us:.1f},x{row[name + '_vs_direct']:.3f}")
+        print(f"fig8_direct_{n},{1e6 / row['direct_its']:.1f},x1.000")
+
+
+if __name__ == "__main__":
+    main()

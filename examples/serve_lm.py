@@ -1,0 +1,44 @@
+"""Batched serving example: prefill a batch of prompts, decode with a KV
+cache, verify against the full forward pass.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.launch.serve import Engine
+from repro.models import build_smoke
+from repro.models.layers import unbox
+
+
+def main():
+    cfg = get_smoke_config("yi_9b")
+    model = build_smoke(cfg)
+    params, _ = unbox(model.init(jax.random.PRNGKey(0)))
+    batch, prompt_len, gen = 4, 32, 24
+
+    eng = Engine(model, params, batch, prompt_len + gen)
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (batch, prompt_len), 0, cfg.vocab)
+    t0 = time.time()
+    out = eng.generate(prompts, gen)
+    dt = time.time() - t0
+    print(f"generated {out.shape[1]} tokens × {batch} requests "
+          f"in {dt:.2f}s ({batch * gen / dt:.1f} tok/s)")
+
+    # verify: greedy decode must match argmax over the full forward pass
+    full = jnp.concatenate([prompts, out[:, :-1]], axis=1)
+    hidden, _, _ = model.apply(params, {"tokens": full}, mode="train")
+    logits = model.unembed(params, hidden)
+    want = jnp.argmax(logits[:, prompt_len - 1:], axis=-1)
+    match = float(jnp.mean((want == out).astype(jnp.float32)))
+    print(f"greedy-vs-full-forward agreement: {match*100:.1f}%")
+    assert match > 0.99, "decode path diverges from the full forward pass"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,174 @@
+"""Jacobi3D proxy application (paper §4.3–4.4).
+
+Three execution modes on the same numerics:
+
+  run_reference   — single-array jnp oracle
+  run_tasked      — PREMA-style: the domain is over-decomposed into mobile
+                    chunks executed as hetero_tasks with implicit
+                    dependencies; halo exchange = put operations; compute and
+                    halo traffic of different chunks overlap (paper Fig. 14)
+  run_spmd        — production path: shard_map over a mesh axis with
+                    ppermute halo exchange — the compiled TPU analogue;
+                    ``bulk_sync=True`` emulates the MPI+CUDA baseline
+                    (exchange, barrier, then compute), ``False`` lets XLA
+                    overlap per-slab compute with the next face transfer.
+
+The stencil itself also exists as a Pallas kernel (repro.kernels.jacobi3d).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+from repro.core import HeteroTask, Runtime
+from repro.distributed.collectives import halo_exchange_1d
+from repro.distributed.overdecomp import DecompPlan, plan_decomposition
+
+
+def stencil_update(u: jax.Array, lo0, hi0, lo1, hi1, lo2, hi2) -> jax.Array:
+    """One Jacobi sweep over the interior given face halos (each a slab of
+    thickness 1; zeros at physical boundaries)."""
+    up = jnp.pad(u, 1)
+    up = up.at[0, 1:-1, 1:-1].set(lo0).at[-1, 1:-1, 1:-1].set(hi0)
+    up = up.at[1:-1, 0, 1:-1].set(lo1).at[1:-1, -1, 1:-1].set(hi1)
+    up = up.at[1:-1, 1:-1, 0].set(lo2).at[1:-1, 1:-1, -1].set(hi2)
+    return ((up[:-2, 1:-1, 1:-1] + up[2:, 1:-1, 1:-1] +
+             up[1:-1, :-2, 1:-1] + up[1:-1, 2:, 1:-1] +
+             up[1:-1, 1:-1, :-2] + up[1:-1, 1:-1, 2:]) / 6.0).astype(u.dtype)
+
+
+# ---------------------------------------------------------------------------
+# reference
+# ---------------------------------------------------------------------------
+
+def run_reference(u0: np.ndarray, iters: int) -> np.ndarray:
+    u = jnp.asarray(u0)
+
+    @jax.jit
+    def step(u):
+        z = jnp.zeros
+        return stencil_update(
+            u,
+            z(u.shape[1:]), z(u.shape[1:]),
+            z((u.shape[0], u.shape[2])), z((u.shape[0], u.shape[2])),
+            z(u.shape[:2]), z(u.shape[:2]))
+
+    for _ in range(iters):
+        u = step(u)
+    return np.asarray(u)
+
+
+# ---------------------------------------------------------------------------
+# PREMA-tasked over-decomposed version
+# ---------------------------------------------------------------------------
+
+def run_tasked(u0: np.ndarray, iters: int, runtime: Runtime,
+               over_decomposition: int = 1) -> np.ndarray:
+    """Over-decomposed Jacobi on the heterogeneous tasking runtime. Chunks
+    are hetero_objects; each iteration submits per-chunk face-extraction and
+    update tasks whose dependencies the runtime infers — independent chunks
+    overlap automatically (the paper's Fig. 14 pipeline)."""
+    n_workers = len(runtime.devices)
+    plan = plan_decomposition(u0.shape, n_workers, over_decomposition)
+    chunks = {c.cid: runtime.hetero_object(
+        np.ascontiguousarray(u0[c.lo[0]:c.hi[0], c.lo[1]:c.hi[1],
+                                c.lo[2]:c.hi[2]]), name=f"chunk{c.cid}")
+        for c in plan.chunks}
+    # halo buffers per (chunk, face)
+    faces = {}
+    for c in plan.chunks:
+        s = c.shape
+        face_shapes = {"lo0": (s[1], s[2]), "hi0": (s[1], s[2]),
+                       "lo1": (s[0], s[2]), "hi1": (s[0], s[2]),
+                       "lo2": (s[0], s[1]), "hi2": (s[0], s[1])}
+        for tag, fs in face_shapes.items():
+            faces[(c.cid, tag)] = runtime.hetero_object(
+                np.zeros(fs, u0.dtype), name=f"halo{c.cid}:{tag}")
+
+    # kernels created once → the runtime's jit cache hits across iterations
+    def make_face_kernel(tag: str):
+        d = int(tag[-1])
+        hi = tag.startswith("hi")
+
+        def extract(u, out):
+            idx = [slice(None)] * 3
+            idx[d] = -1 if hi else 0
+            return u[tuple(idx)]
+        return extract
+
+    face_kernels = {tag: make_face_kernel(tag)
+                    for tag in ("lo0", "hi0", "lo1", "hi1", "lo2", "hi2")}
+
+    def update_kernel(u, l0, h0, l1, h1, l2, h2):
+        return stencil_update(u, l0, h0, l1, h1, l2, h2)
+
+    opposite = {"lo0": "hi0", "hi0": "lo0", "lo1": "hi1", "hi1": "lo1",
+                "lo2": "hi2", "hi2": "lo2"}
+
+    for _ in range(iters):
+        # 1) extract + "send" faces into the neighbour's halo buffers (put)
+        for c in plan.chunks:
+            nb = plan.neighbors(c.cid)
+            for tag, other in nb.items():
+                if other is None:
+                    continue
+                runtime.run(
+                    face_kernels[tag],
+                    [(chunks[c.cid], "r"),
+                     (faces[(other, opposite[tag])], "w")],
+                    name=f"halo{c.cid}->{other}")
+        # 2) update each chunk from its halo buffers
+        for c in plan.chunks:
+            args = [(chunks[c.cid], "rw")]
+            for tag in ("lo0", "hi0", "lo1", "hi1", "lo2", "hi2"):
+                args.append((faces[(c.cid, tag)], "r"))
+            runtime.run(update_kernel, args, name=f"update{c.cid}")
+    runtime.barrier(timeout=600)
+
+    out = np.empty_like(u0)
+    for c in plan.chunks:
+        out[c.lo[0]:c.hi[0], c.lo[1]:c.hi[1], c.lo[2]:c.hi[2]] = \
+            chunks[c.cid].get()
+    return out
+
+
+# ---------------------------------------------------------------------------
+# SPMD production version (shard_map + ppermute)
+# ---------------------------------------------------------------------------
+
+def make_spmd_step(mesh: Mesh, axis: str = "data", bulk_sync: bool = False):
+    """Returns a jitted step: u sharded along dim 0 of [X,Y,Z] over ``axis``.
+    bulk_sync=True forces the halo exchange to complete before any compute
+    (optimization barrier) — the MPI+CUDA baseline schedule."""
+
+    def local_step(u):
+        lo0, hi0 = halo_exchange_1d(u, axis)
+        if bulk_sync:
+            u, lo0, hi0 = jax.lax.optimization_barrier((u, lo0, hi0))
+        z = jnp.zeros
+        return stencil_update(
+            u, lo0[0], hi0[0],
+            z((u.shape[0], u.shape[2]), u.dtype),
+            z((u.shape[0], u.shape[2]), u.dtype),
+            z((u.shape[0], u.shape[1]), u.dtype),
+            z((u.shape[0], u.shape[1]), u.dtype))
+
+    step = jax.shard_map(local_step, mesh=mesh,
+                         in_specs=PS(axis), out_specs=PS(axis))
+    return jax.jit(step)
+
+
+def run_spmd(u0: np.ndarray, iters: int, mesh: Mesh, axis: str = "data",
+             bulk_sync: bool = False) -> np.ndarray:
+    step = make_spmd_step(mesh, axis, bulk_sync)
+    sharding = NamedSharding(mesh, PS(axis))
+    u = jax.device_put(jnp.asarray(u0), sharding)
+    for _ in range(iters):
+        u = step(u)
+    return np.asarray(u)

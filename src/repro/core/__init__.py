@@ -1,0 +1,14 @@
+"""Heterogeneous tasking framework — the paper's primary contribution.
+
+hetero_objects (coherence-tracked data), hetero_tasks (device-type-targeted
+tasks with implicit dependency inference), a modular push/pop scheduler, a
+memory layer (staging pools, LRU offload), and the Core Runtime gluing them
+to the Device API.
+"""
+from repro.core.futures import HFuture  # noqa: F401
+from repro.core.hetero_object import HOST, HeteroObject  # noqa: F401
+from repro.core.hetero_task import Access, HeteroTask, TaskState  # noqa: F401
+from repro.core.runtime import Runtime, RuntimeConfig  # noqa: F401
+from repro.core.scheduler import (SCHEDULERS, FifoScheduler,  # noqa: F401
+                                  LeastLoadedScheduler, LocalityAwareScheduler,
+                                  RoundRobinScheduler, Scheduler)

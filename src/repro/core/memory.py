@@ -1,0 +1,130 @@
+"""Memory layer: per-device usage accounting, LRU offload, staging pools.
+
+Paper analogues:
+  §4.1.1 page-locked host pool  → ``StagingPool``: preallocated, reused host
+                                  staging buffers keyed by (shape, dtype)
+  §4.1.2 custom device allocator → usage ledger + buffer donation (the XLA
+                                  analogue of reusing a preallocated arena)
+  §3.1.1 LRU offload             → ``MemoryMonitor.ensure_capacity`` spills
+                                  least-recently-used idle objects to host
+"""
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+class StagingPool:
+    """Reusable host staging buffers (the page-locked pool analogue)."""
+
+    def __init__(self, enabled: bool = True, max_buffers_per_key: int = 8):
+        self.enabled = enabled
+        self._free: Dict[Tuple[Tuple[int, ...], str], List[np.ndarray]] = \
+            collections.defaultdict(list)
+        self._lock = threading.Lock()
+        self._max = max_buffers_per_key
+        self.hits = 0
+        self.misses = 0
+
+    def acquire(self, shape: Tuple[int, ...], dtype) -> np.ndarray:
+        if not self.enabled:
+            self.misses += 1
+            return np.empty(shape, dtype)
+        key = (tuple(shape), np.dtype(dtype).str)
+        with self._lock:
+            lst = self._free.get(key)
+            if lst:
+                self.hits += 1
+                return lst.pop()
+        self.misses += 1
+        return np.empty(shape, dtype)
+
+    def release(self, arr: np.ndarray) -> None:
+        if not self.enabled:
+            return
+        key = (tuple(arr.shape), arr.dtype.str)
+        with self._lock:
+            lst = self._free[key]
+            if len(lst) < self._max:
+                lst.append(arr)
+
+
+class RequestPool:
+    """Freelist of request/future objects (paper §4.1.4)."""
+
+    def __init__(self, factory: Callable[[], Any], enabled: bool = True):
+        self._factory = factory
+        self.enabled = enabled
+        self._free: List[Any] = []
+        self._lock = threading.Lock()
+
+    def acquire(self) -> Any:
+        if self.enabled:
+            with self._lock:
+                if self._free:
+                    obj = self._free.pop()
+                    obj.reset()
+                    return obj
+        return self._factory()
+
+    def release(self, obj: Any) -> None:
+        if not self.enabled:
+            return
+        with self._lock:
+            if len(self._free) < 1024:
+                self._free.append(obj)
+
+
+class MemoryMonitor:
+    """Tracks bytes resident per device; evicts LRU idle objects under
+    pressure. Objects register/unregister copies; ``touch`` updates recency."""
+
+    def __init__(self, capacities: Dict[int, int]):
+        self._cap = dict(capacities)
+        self._usage: Dict[int, int] = {d: 0 for d in capacities}
+        self._lru: Dict[int, "collections.OrderedDict[int, Any]"] = {
+            d: collections.OrderedDict() for d in capacities}
+        self._lock = threading.RLock()
+        self.evictions = 0
+
+    def usage(self, device_id: int) -> int:
+        return self._usage[device_id]
+
+    def capacity(self, device_id: int) -> int:
+        return self._cap[device_id]
+
+    def register(self, device_id: int, obj, nbytes: int) -> None:
+        with self._lock:
+            self._usage[device_id] += nbytes
+            self._lru[device_id][id(obj)] = obj
+            self._lru[device_id].move_to_end(id(obj))
+
+    def unregister(self, device_id: int, obj, nbytes: int) -> None:
+        with self._lock:
+            self._usage[device_id] -= nbytes
+            self._lru[device_id].pop(id(obj), None)
+
+    def touch(self, device_id: int, obj) -> None:
+        with self._lock:
+            if id(obj) in self._lru[device_id]:
+                self._lru[device_id].move_to_end(id(obj))
+
+    def ensure_capacity(self, device_id: int, nbytes: int,
+                        evict: Callable[[Any, int], bool]) -> bool:
+        """Evict LRU objects (via ``evict(obj, device_id)``, which returns
+        False when an object is busy and must be skipped) until ``nbytes``
+        fits. Returns True on success."""
+        with self._lock:
+            if self._usage[device_id] + nbytes <= self._cap[device_id]:
+                return True
+            candidates = list(self._lru[device_id].values())
+        for obj in candidates:
+            if self._usage[device_id] + nbytes <= self._cap[device_id]:
+                return True
+            if evict(obj, device_id):
+                self.evictions += 1
+        with self._lock:
+            return self._usage[device_id] + nbytes <= self._cap[device_id]

@@ -1,0 +1,386 @@
+"""Core Runtime (paper §3.1.3/§3.1.5): the glue between application
+preferences, the scheduler, and the Device API.
+
+Execution model (faithful to the paper):
+  submit() appends an execution request and returns immediately;
+  dependencies are inferred (or explicit); blocked tasks wait for their
+  dependencies; runnable tasks go to the scheduler; per-device worker
+  threads ("dedicated threads", paper Fig. 9) pop work, stage argument
+  copies onto their device, launch asynchronously through the Device API,
+  and retire tasks as results become ready.
+
+Configuration toggles map 1:1 to the paper's optimization ladder (Fig. 8)
+so the benchmark can reproduce it:
+  staging_pool     — §4.1.1 page-locked host memory pool
+  cache_jit        — §4.1.2 custom device allocator (jit cache + donation)
+  request_pool     — §4.1.4 request pools
+  transfer_thread  — §4.1.3 dedicated transfer queue
+  inflight         — §4.1.3 multiple compute queues (async window)
+  dedicated_threads— §4.1.6 one worker per device
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import dependency as dep
+from repro.core.device_api import Device, JaxDevice, discover_devices
+from repro.core.futures import HFuture
+from repro.core.hetero_object import HOST, HeteroObject
+from repro.core.hetero_task import Access, HeteroTask, TaskState
+from repro.core.memory import MemoryMonitor, RequestPool, StagingPool
+from repro.core.scheduler import SCHEDULERS, Scheduler
+
+
+@dataclasses.dataclass
+class RuntimeConfig:
+    scheduler: str = "locality"
+    staging_pool: bool = True
+    cache_jit: bool = True
+    request_pool: bool = True
+    transfer_thread: bool = True
+    inflight: int = 4             # async launches in flight per device
+    dedicated_threads: bool = True
+    sync_dispatch: bool = False   # TF-Baseline: block after every launch
+    memory_capacity: Optional[int] = None
+    poll_interval_s: float = 0.0005
+
+
+class Runtime:
+    def __init__(self, config: Optional[RuntimeConfig] = None,
+                 devices: Optional[List[Device]] = None):
+        self.cfg = config or RuntimeConfig()
+        self.devices: List[Device] = devices if devices is not None else \
+            discover_devices(self.cfg.memory_capacity, self.cfg.cache_jit)
+        for d in self.devices:
+            if isinstance(d, JaxDevice):
+                d.cache_jit = self.cfg.cache_jit
+        self.memory = MemoryMonitor(
+            {d.info.device_id: d.info.memory_capacity for d in self.devices})
+        self.scheduler: Scheduler = SCHEDULERS[self.cfg.scheduler](
+            {d.info.device_id: d.info.device_type for d in self.devices})
+        self.staging = StagingPool(self.cfg.staging_pool)
+        self.futures = RequestPool(HFuture, self.cfg.request_pool)
+        self._lock = threading.RLock()
+        self._work = threading.Condition(self._lock)
+        self._tasks_pending = 0
+        self._shutdown = False
+        self._stats = {"tasks": 0, "transfers_h2d": 0, "transfers_d2h": 0,
+                       "bytes_h2d": 0, "bytes_d2h": 0}
+        self._threads: List[threading.Thread] = []
+        self._xfer_q: "queue.Queue" = queue.Queue()
+        self._start_workers()
+
+    # ------------------------------------------------------------------
+    # public API
+    # ------------------------------------------------------------------
+    def hetero_object(self, value=None, shape=None, dtype=None,
+                      name: str = "") -> HeteroObject:
+        return HeteroObject(self, value=value, shape=shape, dtype=dtype,
+                            name=name)
+
+    def submit(self, task: HeteroTask, kernel: Callable) -> HFuture:
+        """Enqueue an execution request; returns the task's future."""
+        task.kernel = kernel
+        with self._lock:
+            task.state = TaskState.SUBMITTED
+            self._tasks_pending += 1
+            self._stats["tasks"] += 1
+            n = dep.infer_dependencies(task)
+            if n > 0:
+                task.state = TaskState.BLOCKED
+            else:
+                task.state = TaskState.READY
+                self.scheduler.push(task)
+            self._work.notify_all()
+        return task.future
+
+    def run(self, kernel: Callable, args: Sequence[Tuple[HeteroObject, str]],
+            device_type: Optional[str] = None, name: str = "") -> HeteroTask:
+        """Convenience: build + submit in one call.
+        args: [(obj, 'r'|'w'|'rw'), ...]."""
+        t = HeteroTask(name=name)
+        for obj, mode in args:
+            getattr(t.arg(obj), {"r": "read", "w": "write",
+                                 "rw": "rw"}[mode])()
+        t.device(device_type)
+        self.submit(t, kernel)
+        return t
+
+    def barrier(self, timeout: Optional[float] = 120.0) -> None:
+        """Wait until every submitted task has retired."""
+        deadline = None if timeout is None else time.time() + timeout
+        with self._lock:
+            while self._tasks_pending > 0:
+                remaining = None if deadline is None else \
+                    max(deadline - time.time(), 0.0)
+                if not self._work.wait(timeout=remaining):
+                    raise TimeoutError(
+                        f"barrier: {self._tasks_pending} tasks pending")
+
+    def stats(self) -> Dict[str, Any]:
+        s = dict(self._stats)
+        s["staging_hits"] = self.staging.hits
+        s["staging_misses"] = self.staging.misses
+        s["evictions"] = self.memory.evictions
+        return s
+
+    def shutdown(self) -> None:
+        with self._lock:
+            self._shutdown = True
+            self._work.notify_all()
+        self._xfer_q.put(None)
+        for t in self._threads:
+            t.join(timeout=5)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.shutdown()
+
+    # ------------------------------------------------------------------
+    # host access protocol
+    # ------------------------------------------------------------------
+    def _request_host(self, obj: HeteroObject, write: bool) -> HFuture:
+        fut = self.futures.acquire()
+
+        def deliver():
+            arr = self._stage_to_host(obj)
+            with obj.lock:
+                obj.host_pins += 1
+                if write:
+                    # invalidate device copies: host becomes the only valid one
+                    for sp in [s for s in obj.copies if s != HOST]:
+                        self._drop_copy(obj, sp)
+            fut.set_result(arr)
+
+        with self._lock:
+            lw = obj.last_writer
+        if lw is not None and not lw.done():
+            lw.future.add_done_callback(lambda _: deliver())
+        else:
+            deliver()
+        return fut
+
+    def _release_host(self, obj: HeteroObject) -> None:
+        with obj.lock:
+            obj.host_pins = max(0, obj.host_pins - 1)
+
+    def _free_object(self, obj: HeteroObject) -> None:
+        with obj.lock:
+            for sp in list(obj.copies):
+                self._drop_copy(obj, sp)
+
+    # ------------------------------------------------------------------
+    # data movement / coherence
+    # ------------------------------------------------------------------
+    def _device(self, device_id: int) -> Device:
+        return self.devices[device_id]
+
+    def _drop_copy(self, obj: HeteroObject, space: int) -> None:
+        if space in obj.copies:
+            del obj.copies[space]
+            if space != HOST:
+                self.memory.unregister(space, obj, obj.nbytes)
+
+    def _stage_to_host(self, obj: HeteroObject) -> np.ndarray:
+        with obj.lock:
+            if HOST in obj.copies:
+                return obj.copies[HOST]
+            src = next(iter(obj.copies), None)
+        if src is None:
+            arr = self.staging.acquire(obj.shape, obj.dtype)
+            arr[...] = 0
+        else:
+            dev_arr = obj.copies[src]
+            arr = self._device(src).download(dev_arr)
+            self._stats["transfers_d2h"] += 1
+            self._stats["bytes_d2h"] += obj.nbytes
+        with obj.lock:
+            obj.copies[HOST] = arr
+        return arr
+
+    def _evict(self, obj: HeteroObject, device_id: int) -> bool:
+        """LRU eviction callback: spill to host unless busy (paper §3.1.1)."""
+        if obj.busy():
+            return False
+        with obj.lock:
+            if device_id not in obj.copies:
+                return False
+            if len(obj.copies) == 1:      # device holds the only valid copy
+                pass                       # must stage out first
+        self._stage_to_host(obj)
+        with obj.lock:
+            self._drop_copy(obj, device_id)
+        return True
+
+    def _ensure_on_device(self, obj: HeteroObject, device_id: int,
+                          will_write: bool) -> Any:
+        """Coherence walk: make a VALID copy resident on device_id."""
+        with obj.lock:
+            if device_id in obj.copies:
+                arr = obj.copies[device_id]
+                self.memory.touch(device_id, obj)
+                if will_write:
+                    for sp in [s for s in obj.copies if s != device_id]:
+                        self._drop_copy(obj, sp)
+                return arr
+        # need a transfer: source preference: host, else any device (staged
+        # through host — the paper's generic path)
+        host_arr = self._stage_to_host(obj)
+        self.memory.ensure_capacity(device_id, obj.nbytes, self._evict)
+        dev_arr = self._device(device_id).upload(host_arr)
+        self._stats["transfers_h2d"] += 1
+        self._stats["bytes_h2d"] += obj.nbytes
+        with obj.lock:
+            obj.copies[device_id] = dev_arr
+            self.memory.register(device_id, obj, obj.nbytes)
+            if will_write:
+                for sp in [s for s in obj.copies if s != device_id]:
+                    self._drop_copy(obj, sp)
+        return dev_arr
+
+    # ------------------------------------------------------------------
+    # workers
+    # ------------------------------------------------------------------
+    def _start_workers(self):
+        n = len(self.devices) if self.cfg.dedicated_threads else 1
+        for i in range(n):
+            hint = self.devices[i].info.device_id \
+                if self.cfg.dedicated_threads else None
+            th = threading.Thread(target=self._worker, args=(hint,),
+                                  daemon=True, name=f"repro-worker-{i}")
+            th.start()
+            self._threads.append(th)
+        if self.cfg.transfer_thread:
+            th = threading.Thread(target=self._transfer_worker, daemon=True,
+                                  name="repro-xfer")
+            th.start()
+            self._threads.append(th)
+
+    def _transfer_worker(self):
+        while True:
+            item = self._xfer_q.get()
+            if item is None:
+                return
+            fn, fut = item
+            try:
+                fut.set_result(fn())
+            except BaseException as e:   # pragma: no cover
+                fut.set_error(e)
+
+    def _async_transfer(self, fn: Callable) -> HFuture:
+        fut = self.futures.acquire()
+        if self.cfg.transfer_thread:
+            self._xfer_q.put((fn, fut))
+        else:
+            try:
+                fut.set_result(fn())
+            except BaseException as e:   # pragma: no cover
+                fut.set_error(e)
+        return fut
+
+    def _worker(self, device_hint: Optional[int]):
+        inflight: List[Tuple[HeteroTask, Any]] = []
+        while True:
+            with self._lock:
+                if self._shutdown:
+                    return
+                item = self.scheduler.pop(device_hint)
+                if item is not None:
+                    task, dev = item
+                    task.state = TaskState.RUNNING
+                    task.chosen_device = dev
+                    self.scheduler.load[dev] += 1
+            if item is None:
+                # poll in-flight completions; park if nothing to do
+                if inflight:
+                    self._poll_inflight(inflight, block_one=True)
+                    continue
+                with self._lock:
+                    if self._shutdown:
+                        return
+                    self._work.wait(timeout=self.cfg.poll_interval_s * 20)
+                continue
+            task, dev = item
+            try:
+                handle = self._launch(task, dev)
+            except BaseException as e:
+                self._finish(task, error=e)
+                continue
+            if self.cfg.sync_dispatch or self.cfg.inflight <= 1:
+                self._device(dev).synchronize(handle)
+                self._finish(task, result=handle)
+            else:
+                inflight.append((task, handle))
+                if len(inflight) >= self.cfg.inflight:
+                    self._poll_inflight(inflight, block_one=True)
+
+    def _poll_inflight(self, inflight: List, block_one: bool = False):
+        still: List = []
+        finished = []
+        for task, handle in inflight:
+            if self._device(task.chosen_device).is_ready(handle):
+                finished.append((task, handle))
+            else:
+                still.append((task, handle))
+        if block_one and not finished and still:
+            task, handle = still.pop(0)
+            self._device(task.chosen_device).synchronize(handle)
+            finished.append((task, handle))
+        inflight[:] = still
+        for task, handle in finished:
+            self._finish(task, result=handle)
+
+    def _launch(self, task: HeteroTask, device_id: int):
+        """Stage args, then launch asynchronously via the Device API."""
+        dev_args = []
+        donate = []
+        for i, ref in enumerate(task.args):
+            arr = self._ensure_on_device(ref.obj, device_id,
+                                         will_write=False)
+            dev_args.append(arr)
+            if ref.access.writes and self.cfg.cache_jit:
+                donate.append(i)
+        handle = self._device(device_id).launch(
+            task.kernel, tuple(dev_args), donate=tuple(donate))
+        # bind outputs back onto the written hetero_objects
+        outs = handle if isinstance(handle, (tuple, list)) else (handle,)
+        wi = 0
+        for ref in task.args:
+            if ref.access.writes:
+                if wi < len(outs):
+                    new_arr = outs[wi]
+                    with ref.obj.lock:
+                        for sp in list(ref.obj.copies):
+                            self._drop_copy(ref.obj, sp)
+                        ref.obj.copies[device_id] = new_arr
+                        self.memory.register(device_id, ref.obj,
+                                             ref.obj.nbytes)
+                wi += 1
+        return handle
+
+    def _finish(self, task: HeteroTask, result=None, error=None):
+        with self._lock:
+            if error is not None:
+                task.state = TaskState.FAILED
+            else:
+                task.state = TaskState.DONE
+            if task.chosen_device is not None:
+                self.scheduler.load[task.chosen_device] -= 1
+            ready = dep.retire(task)
+            for r in ready:
+                r.state = TaskState.READY
+                self.scheduler.push(r)
+            self._tasks_pending -= 1
+            self._work.notify_all()
+        if error is not None:
+            task.future.set_error(error)
+        else:
+            task.future.set_result(result)

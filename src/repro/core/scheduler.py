@@ -1,0 +1,169 @@
+"""Modular scheduler (paper §3.1.4): an abstract class with exactly two
+operations — push(task) adds a runnable task; pop(device_hint) returns the
+next (task, device_id) pair. Policies are pluggable; the runtime never
+assumes more than push/pop.
+"""
+from __future__ import annotations
+
+import abc
+import collections
+import threading
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.hetero_task import HeteroTask
+
+
+class Scheduler(abc.ABC):
+    """Device table: {device_id: device_type}. ``load`` is maintained by the
+    runtime (tasks queued+running per device) and may be used by policies."""
+
+    def __init__(self, device_types: Dict[int, str]):
+        self.device_types = dict(device_types)
+        self.load: Dict[int, int] = {d: 0 for d in device_types}
+        self._lock = threading.Lock()
+
+    @abc.abstractmethod
+    def push(self, task: HeteroTask) -> None: ...
+
+    @abc.abstractmethod
+    def pop(self, device_hint: Optional[int] = None
+            ) -> Optional[Tuple[HeteroTask, int]]: ...
+
+    def __len__(self) -> int:  # pragma: no cover - informational
+        return 0
+
+    # helpers ---------------------------------------------------------------
+    def eligible(self, task: HeteroTask) -> List[int]:
+        if task.device_type is None:
+            return list(self.device_types)
+        return [d for d, t in self.device_types.items()
+                if t == task.device_type]
+
+
+class FifoScheduler(Scheduler):
+    """Single global FIFO; device = hint if eligible, else least-loaded."""
+
+    def __init__(self, device_types):
+        super().__init__(device_types)
+        self._q: Deque[HeteroTask] = collections.deque()
+
+    def push(self, task):
+        with self._lock:
+            self._q.append(task)
+
+    def pop(self, device_hint=None):
+        with self._lock:
+            for i, task in enumerate(self._q):
+                elig = self.eligible(task)
+                if not elig:
+                    continue
+                if device_hint is not None and device_hint in elig:
+                    dev = device_hint
+                elif device_hint is not None:
+                    continue   # let the right device's worker take it
+                else:
+                    dev = min(elig, key=lambda d: self.load[d])
+                del self._q[i]
+                return task, dev
+        return None
+
+    def __len__(self):
+        return len(self._q)
+
+
+class LeastLoadedScheduler(FifoScheduler):
+    """FIFO order, but always place on the least-loaded eligible device —
+    the multi-GPU load-balancing policy behind the paper's Fig. 9."""
+
+    def pop(self, device_hint=None):
+        with self._lock:
+            if not self._q:
+                return None
+            if device_hint is not None:
+                # only take work if we're (one of) the least loaded
+                for i, task in enumerate(self._q):
+                    elig = self.eligible(task)
+                    if device_hint not in elig:
+                        continue
+                    best = min(self.load[d] for d in elig)
+                    if self.load[device_hint] <= best:
+                        del self._q[i]
+                        return task, device_hint
+                return None
+            task = self._q.popleft()
+            elig = self.eligible(task) or list(self.device_types)
+            return task, min(elig, key=lambda d: self.load[d])
+
+
+class LocalityAwareScheduler(Scheduler):
+    """Prefer the device already holding the most argument bytes (paper:
+    "scheduler optimizes data locality to reduce memory transfers"), with a
+    load penalty so one hot device does not serialize the queue."""
+
+    def __init__(self, device_types, load_penalty_bytes: int = 1 << 20):
+        super().__init__(device_types)
+        self._q: Deque[HeteroTask] = collections.deque()
+        self.load_penalty = load_penalty_bytes
+
+    def push(self, task):
+        with self._lock:
+            self._q.append(task)
+
+    def _score(self, task: HeteroTask, dev: int) -> float:
+        return (task.arg_bytes_on(dev)
+                - self.load_penalty * self.load[dev])
+
+    def pop(self, device_hint=None):
+        with self._lock:
+            for i, task in enumerate(self._q):
+                elig = self.eligible(task)
+                if not elig:
+                    continue
+                best = max(elig, key=lambda d: self._score(task, d))
+                if device_hint is not None and best != device_hint:
+                    continue
+                del self._q[i]
+                return task, best
+        return None
+
+    def __len__(self):
+        return len(self._q)
+
+
+class RoundRobinScheduler(Scheduler):
+    def __init__(self, device_types):
+        super().__init__(device_types)
+        self._q: Deque[HeteroTask] = collections.deque()
+        self._next = 0
+
+    def push(self, task):
+        with self._lock:
+            self._q.append(task)
+
+    def pop(self, device_hint=None):
+        with self._lock:
+            for i, task in enumerate(self._q):
+                elig = self.eligible(task)
+                if not elig:
+                    continue
+                if device_hint is not None:
+                    if device_hint in elig:
+                        del self._q[i]
+                        return task, device_hint
+                    continue
+                dev = elig[self._next % len(elig)]
+                self._next += 1
+                del self._q[i]
+                return task, dev
+        return None
+
+    def __len__(self):
+        return len(self._q)
+
+
+SCHEDULERS = {
+    "fifo": FifoScheduler,
+    "least_loaded": LeastLoadedScheduler,
+    "locality": LocalityAwareScheduler,
+    "round_robin": RoundRobinScheduler,
+}

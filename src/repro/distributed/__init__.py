@@ -1,0 +1,8 @@
+from repro.distributed.elastic import ElasticController, WorkerHealth  # noqa: F401
+from repro.distributed.handlers import handler, registered, resolve  # noqa: F401
+from repro.distributed.messaging import Cluster, HandlerContext, Message, Rank  # noqa: F401
+from repro.distributed.mobile_object import (MobileObject, MobilePtr,  # noqa: F401
+                                             OwnerMap, block_distribution,
+                                             rebalance_greedy)
+from repro.distributed.overdecomp import (Chunk, DecompPlan,  # noqa: F401
+                                          microbatch_plan, plan_decomposition)

@@ -1,0 +1,76 @@
+"""SPMD lowering of PREMA's communication patterns (hardware adaptation).
+
+On a TPU pod there is no message-driven NIC: communication is compiled into
+the program as ICI collectives. This module lowers the paper's patterns:
+
+  handler payload / put / get  →  lax.ppermute (point-to-point)
+  halo exchange (Jacobi)       →  paired ppermutes per face
+  scatter of mobile chunks     →  all_to_all
+  reduction handlers           →  psum
+
+The host-staged path of §3.2.3 survives as ``host_round_trip`` for
+host-mediated transfers (checkpoint, elastic rescale, data ingestion).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+
+def ring_permute(x: jax.Array, axis_name: str, shift: int = 1) -> jax.Array:
+    """Send x to rank+shift (ring) along a mesh axis — inside shard_map."""
+    n = jax.lax.axis_size(axis_name)
+    perm = [(i, (i + shift) % n) for i in range(n)]
+    return jax.lax.ppermute(x, axis_name, perm)
+
+
+def halo_exchange_1d(block: jax.Array, axis_name: str, halo: int = 1,
+                     wrap: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Exchange face slabs with ±1 neighbours along ``axis_name``.
+    block: [..., L, ...] local slab, exchange along dim 0.
+    Returns (lo_halo, hi_halo) received from the -1 / +1 neighbours
+    (zeros at boundaries unless wrap)."""
+    n = jax.lax.axis_size(axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    hi_face = block[-halo:]          # send up
+    lo_face = block[:halo]           # send down
+    if wrap:
+        perm_up = [(i, (i + 1) % n) for i in range(n)]
+        perm_dn = [(i, (i - 1) % n) for i in range(n)]
+    else:
+        perm_up = [(i, i + 1) for i in range(n - 1)]
+        perm_dn = [(i, i - 1) for i in range(1, n)]
+    from_lo = jax.lax.ppermute(hi_face, axis_name, perm_up)   # my lo halo
+    from_hi = jax.lax.ppermute(lo_face, axis_name, perm_dn)   # my hi halo
+    if not wrap:
+        zero = jnp.zeros_like(from_lo)
+        from_lo = jnp.where(idx == 0, zero, from_lo)
+        from_hi = jnp.where(idx == n - 1, jnp.zeros_like(from_hi), from_hi)
+    return from_lo, from_hi
+
+
+def spmd_put(x: jax.Array, axis_name: str, src: int, dst: int) -> jax.Array:
+    """One-sided put: ``src``'s x replaces ``dst``'s x; other ranks keep
+    theirs. Lowers to a single collective-permute pair."""
+    moved = jax.lax.ppermute(x, axis_name, [(src, dst)])
+    idx = jax.lax.axis_index(axis_name)
+    return jnp.where(idx == dst, moved, x)
+
+
+def spmd_get(x: jax.Array, axis_name: str, src: int) -> jax.Array:
+    """Every rank receives src's x (get analogue): masked psum broadcast."""
+    idx = jax.lax.axis_index(axis_name)
+    masked = jnp.where(idx == src, x, jnp.zeros_like(x))
+    return jax.lax.psum(masked, axis_name)
+
+
+def host_round_trip(x: jax.Array, device: Optional[jax.Device] = None
+                    ) -> jax.Array:
+    """Host-staged path (§3.2.3 without GPU-aware interconnect): device →
+    host → (network) → host → device. Used by checkpoint/elastic paths."""
+    host = np.asarray(x)
+    return jax.device_put(host, device)

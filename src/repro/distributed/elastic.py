@@ -1,0 +1,100 @@
+"""Elastic scaling + fault handling (large-scale runnability layer).
+
+A pod/rank loss is handled as: detect (missed heartbeat) → shrink the worker
+set → replay the owner map against the new world → restore chunk data from
+the last checkpoint (or from surviving replicas) → continue. Growth is the
+same flow without restore. Straggler mitigation reuses the same machinery
+with fractional "slowdown" loads feeding the greedy rebalancer — the
+over-decomposed chunks are the unit of migration, exactly the paper's
+argument for over-decomposition.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.distributed.mobile_object import OwnerMap, rebalance_greedy
+
+
+@dataclasses.dataclass
+class WorkerHealth:
+    last_heartbeat: float
+    slowdown: float = 1.0        # >1 = straggler
+    alive: bool = True
+
+
+class ElasticController:
+    """Tracks worker health; emits migration/remap plans. Pure control logic
+    (no I/O) so it is unit-testable and reusable by the launcher."""
+
+    def __init__(self, workers: Sequence[int], heartbeat_timeout: float = 10.0):
+        self.health: Dict[int, WorkerHealth] = {
+            w: WorkerHealth(time.time()) for w in workers}
+        self.timeout = heartbeat_timeout
+
+    # -- health -------------------------------------------------------------
+    def heartbeat(self, worker: int, slowdown: float = 1.0,
+                  now: Optional[float] = None) -> None:
+        h = self.health[worker]
+        h.last_heartbeat = now if now is not None else time.time()
+        h.slowdown = slowdown
+        h.alive = True
+
+    def detect_failures(self, now: Optional[float] = None) -> List[int]:
+        now = now if now is not None else time.time()
+        dead = []
+        for w, h in self.health.items():
+            if h.alive and now - h.last_heartbeat > self.timeout:
+                h.alive = False
+                dead.append(w)
+        return dead
+
+    def alive_workers(self) -> List[int]:
+        return [w for w, h in self.health.items() if h.alive]
+
+    # -- plans ----------------------------------------------------------
+    def shrink_plan(self, owner: OwnerMap, dead: Sequence[int]
+                    ) -> List[Tuple[int, int, int]]:
+        """Reassign every chunk owned by dead workers round-robin over the
+        survivors. Returns [(oid, old, new)]; data for these chunks must be
+        restored from checkpoint (the old rank is gone)."""
+        alive = self.alive_workers()
+        if not alive:
+            raise RuntimeError("no surviving workers")
+        plan = []
+        i = 0
+        for d in dead:
+            for oid in owner.owned_by(d):
+                dst = alive[i % len(alive)]
+                owner.migrate(oid, dst)
+                plan.append((oid, d, dst))
+                i += 1
+        return plan
+
+    def grow_plan(self, owner: OwnerMap, new_workers: Sequence[int],
+                  chunk_load: Optional[Dict[int, float]] = None
+                  ) -> List[Tuple[int, int, int]]:
+        for w in new_workers:
+            self.health[w] = WorkerHealth(time.time())
+        loads = self.effective_loads(owner, chunk_load)
+        cl = chunk_load or {}
+        return rebalance_greedy(loads, owner, cl,
+                                max_moves=max(8, len(owner) // 4))
+
+    def straggler_plan(self, owner: OwnerMap,
+                       chunk_load: Optional[Dict[int, float]] = None
+                       ) -> List[Tuple[int, int, int]]:
+        loads = self.effective_loads(owner, chunk_load)
+        return rebalance_greedy(loads, owner, chunk_load or {},
+                                max_moves=len(owner) // 4 or 1)
+
+    def effective_loads(self, owner: OwnerMap,
+                        chunk_load: Optional[Dict[int, float]] = None
+                        ) -> Dict[int, float]:
+        cl = chunk_load or {}
+        loads: Dict[int, float] = {w: 0.0 for w in self.alive_workers()}
+        for oid, rank in owner.items():
+            if rank in loads:
+                loads[rank] += cl.get(oid, 1.0) * self.health[rank].slowdown
+        return loads

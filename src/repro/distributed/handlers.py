@@ -1,0 +1,33 @@
+"""Handler registry — PREMA's remote method invocations (paper §1.1).
+
+Handlers are named host functions invoked on the owner of a mobile object,
+possibly on a remote rank. ``@handler`` registers by name so every rank
+resolves the same code from message metadata (the moral equivalent of
+DEFINE_MP_HANDLER in Fig. 5).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+_REGISTRY: Dict[str, Callable] = {}
+
+
+def handler(fn: Callable = None, *, name: str = None):
+    def wrap(f):
+        key = name or f.__name__
+        if key in _REGISTRY and _REGISTRY[key] is not f:
+            raise ValueError(f"handler {key!r} already registered")
+        _REGISTRY[key] = f
+        f.handler_name = key
+        return f
+    if fn is not None:
+        return wrap(fn)
+    return wrap
+
+
+def resolve(name: str) -> Callable:
+    return _REGISTRY[name]
+
+
+def registered() -> Dict[str, Callable]:
+    return dict(_REGISTRY)

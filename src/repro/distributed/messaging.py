@@ -1,0 +1,297 @@
+"""Message-driven distributed runtime (PREMA layer, paper §3.2).
+
+Faithful reproduction of the messaging semantics on an in-process "cluster":
+each rank runs a message-pump thread with its own heterogeneous tasking
+Runtime, and inter-rank messages follow the paper's two-phase protocol —
+
+  sender:   (1) async read-access request on the hetero_object
+            (2) push {future, metadata} to the outgoing pending queue
+            (3) pump polls the queue
+            (4) when the future completes, send metadata msg + payload msg
+            (5) release access
+  receiver: (1) receive metadata  (2) prepare buffer  (3) receive payload
+            (4) request device allocation  (5) run the user handler
+
+Two payload paths are modeled, matching §3.2.3: HOST_STAGED (device→host →
+network → host→device) and DIRECT (device→device; "GPU-aware interconnect").
+Small messages (≤512B) inline the payload in the metadata message
+(§4.2.3). On a real TPU pod the network step lowers to ICI collectives
+(see distributed/collectives.py); this layer is the host-side control plane
+and the single-node multi-device execution engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import queue
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import HeteroObject, Runtime, RuntimeConfig
+from repro.core.futures import HFuture
+from repro.distributed import handlers as H
+
+INLINE_PAYLOAD_BYTES = 512
+_msg_ids = itertools.count()
+_FLUSH = object()            # pump wake-up sentinel (not a Message)
+
+
+@dataclasses.dataclass
+class Message:
+    msg_id: int
+    kind: str                  # 'meta' | 'payload' | 'put' | 'get' | 'ack'
+    src: int
+    dst: int
+    handler: Optional[str] = None
+    payload_shape: Optional[Tuple[int, ...]] = None
+    payload_dtype: Optional[str] = None
+    inline: Optional[bytes] = None
+    payload: Optional[np.ndarray] = None     # "network" buffer
+    object_key: Optional[Any] = None
+    reply_to: Optional[int] = None
+    user: Optional[Dict[str, Any]] = None
+    path: str = "host"         # 'host' (staged) | 'direct'
+
+
+class Rank:
+    """One simulated process: message pump + local tasking runtime."""
+
+    def __init__(self, cluster: "Cluster", rank: int,
+                 rt_config: Optional[RuntimeConfig] = None):
+        self.cluster = cluster
+        self.rank = rank
+        self.runtime = Runtime(rt_config or RuntimeConfig())
+        self.inbox: "queue.Queue[Optional[Message]]" = queue.Queue()
+        self.outgoing: List[Tuple[HFuture, Message, HeteroObject]] = []
+        self._out_lock = threading.Lock()
+        self._pending_meta: Dict[int, Message] = {}
+        self.objects: Dict[Any, HeteroObject] = {}   # global ptr -> object
+        self.stats = {"sent": 0, "received": 0, "bytes_out": 0}
+        self._stop = False
+        self._thread = threading.Thread(target=self._pump, daemon=True,
+                                        name=f"prema-rank{rank}")
+        self._thread.start()
+
+    # ------------------------------------------------------------------
+    # public API (paper: mp_send with hetero_object argument)
+    # ------------------------------------------------------------------
+    def send(self, dst: int, handler_name: str, obj: Optional[HeteroObject]
+             = None, user: Optional[Dict[str, Any]] = None,
+             path: str = "host") -> HFuture:
+        """One-sided async handler invocation with optional hetero_object
+        payload. Returns a future completed when the message has been
+        handed to the network (not when the handler ran)."""
+        fut = HFuture()
+        meta = Message(msg_id=next(_msg_ids), kind="meta", src=self.rank,
+                       dst=dst, handler=handler_name, user=user, path=path)
+        if obj is None:
+            self.cluster.deliver(meta)
+            self.stats["sent"] += 1
+            fut.set_result(None)
+            return fut
+        meta.payload_shape = tuple(obj.shape)
+        meta.payload_dtype = np.dtype(obj.dtype).str
+        # (1) async access request; payload follows when ready
+        access = obj.request_host(write=False)
+
+        def on_ready(_):
+            with self._out_lock:
+                self.outgoing.append((access, meta, obj))
+            # poke the pump so the flush happens now, not at the next poll
+            self.inbox.put(_FLUSH)
+            fut.set_result(None)
+
+        access.add_done_callback(on_ready)
+        return fut
+
+    def put(self, dst: int, object_key: Any, data: HeteroObject,
+            on_done: Optional[str] = None) -> HFuture:
+        """Remote put: overwrite the target's hetero_object (paper §4.2.4:
+        reuses existing, pinned target memory — no receiver allocation)."""
+        fut = HFuture()
+        access = data.request_host(write=False)
+
+        def on_ready(_):
+            arr = np.array(access.get())
+            data.release()
+            msg = Message(msg_id=next(_msg_ids), kind="put", src=self.rank,
+                          dst=dst, object_key=object_key, payload=arr,
+                          handler=on_done)
+            self.cluster.deliver(msg)
+            self.stats["sent"] += 1
+            self.stats["bytes_out"] += arr.nbytes
+            fut.set_result(None)
+
+        access.add_done_callback(on_ready)
+        return fut
+
+    def get(self, dst: int, object_key: Any, handler_name: str) -> HFuture:
+        """Remote get: ask ``dst`` for object data; handler runs locally with
+        the received hetero_object."""
+        fut = HFuture()
+        msg = Message(msg_id=next(_msg_ids), kind="get", src=self.rank,
+                      dst=dst, object_key=object_key, handler=handler_name)
+        self.cluster.deliver(msg)
+        self.stats["sent"] += 1
+        fut.set_result(None)
+        return fut
+
+    def register_object(self, key: Any, obj: HeteroObject) -> None:
+        self.objects[key] = obj
+
+    # ------------------------------------------------------------------
+    # pump
+    # ------------------------------------------------------------------
+    def _flush_outgoing(self):
+        ready = []
+        with self._out_lock:
+            still = []
+            for access, meta, obj in self.outgoing:
+                if access.done():
+                    ready.append((access, meta, obj))
+                else:
+                    still.append((access, meta, obj))
+            self.outgoing = still
+        for access, meta, obj in ready:
+            if meta.path == "direct":
+                # device-aware interconnect (§3.2.3 Fig. 7): the NIC reads
+                # device memory directly — no host-staging copy
+                arr = np.asarray(access.get())
+            else:
+                # host-staged (§3.2.3 Fig. 6): explicit staging copy
+                arr = np.array(access.get())
+            obj.release()
+            nbytes = arr.nbytes
+            if nbytes <= INLINE_PAYLOAD_BYTES:
+                meta.inline = arr.tobytes()          # §4.2.3 small-msg path
+                self.cluster.deliver(meta)
+            else:
+                self.cluster.deliver(meta)
+                payload = Message(msg_id=meta.msg_id, kind="payload",
+                                  src=self.rank, dst=meta.dst, payload=arr,
+                                  path=meta.path)
+                self.cluster.deliver(payload)
+            self.stats["sent"] += 1
+            self.stats["bytes_out"] += nbytes
+
+    def _handle(self, msg: Message):
+        if msg.kind == "meta":
+            self.stats["received"] += 1
+            if msg.payload_shape is None:
+                self._invoke(msg, None)
+            elif msg.inline is not None:
+                arr = np.frombuffer(msg.inline, dtype=msg.payload_dtype
+                                    ).reshape(msg.payload_shape).copy()
+                obj = self.runtime.hetero_object(arr)
+                self._invoke(msg, obj)
+            else:
+                self._pending_meta[msg.msg_id] = msg
+        elif msg.kind == "payload":
+            meta = self._pending_meta.pop(msg.msg_id, None)
+            if meta is None:       # payload raced ahead of metadata
+                self._pending_meta[msg.msg_id] = msg
+                return
+            obj = self.runtime.hetero_object(msg.payload)
+            self._invoke(meta, obj)
+        elif msg.kind == "put":
+            self.stats["received"] += 1
+            target = self.objects.get(msg.object_key)
+            if target is not None:
+                fut = target.request_host(write=True)
+                arr = fut.get()
+                np.copyto(arr, msg.payload)
+                target.release()
+            if msg.handler:
+                self._invoke(msg, target)
+        elif msg.kind == "get":
+            self.stats["received"] += 1
+            src_obj = self.objects.get(msg.object_key)
+            self.send(msg.src, msg.handler, src_obj,
+                      user={"object_key": msg.object_key})
+
+    def _invoke(self, meta: Message, obj: Optional[HeteroObject]):
+        fn = H.resolve(meta.handler)
+        ctx = HandlerContext(self, meta)
+        fn(ctx, obj)
+
+    def _pump(self):
+        while not self._stop:
+            self._flush_outgoing()
+            try:
+                msg = self.inbox.get(timeout=0.001)
+            except queue.Empty:
+                continue
+            if msg is None:
+                return
+            if msg is _FLUSH:
+                continue          # woken to flush outgoing; loop does it
+            self._handle(msg)
+
+    def shutdown(self):
+        self._stop = True
+        self.inbox.put(None)
+        self._thread.join(timeout=5)
+        self.runtime.shutdown()
+
+
+@dataclasses.dataclass
+class HandlerContext:
+    rank: Rank
+    message: Message
+
+    @property
+    def user(self):
+        return self.message.user
+
+    def send(self, dst, handler_name, obj=None, **kw):
+        return self.rank.send(dst, handler_name, obj, **kw)
+
+
+class Cluster:
+    """In-process rank set with a simulated network. ``latency_s`` and
+    ``bw_bytes_per_s`` let benchmarks model interconnect behaviour; the
+    'direct' path skips the host-staging cost the way GPU-aware MPI does."""
+
+    def __init__(self, n_ranks: int, rt_config: Optional[RuntimeConfig] = None,
+                 latency_s: float = 0.0, bw_bytes_per_s: float = 0.0):
+        self.latency_s = latency_s
+        self.bw = bw_bytes_per_s
+        self.ranks = [Rank(self, r, rt_config) for r in range(n_ranks)]
+
+    def deliver(self, msg: Message):
+        if self.latency_s or (self.bw and msg.payload is not None):
+            delay = self.latency_s
+            if self.bw and msg.payload is not None:
+                delay += msg.payload.nbytes / self.bw
+            if delay > 0:
+                time.sleep(delay)
+        self.ranks[msg.dst].inbox.put(msg)
+
+    def barrier(self, timeout: float = 60.0):
+        deadline = time.time() + timeout
+        for r in self.ranks:
+            # outgoing queues drained + runtimes idle
+            while True:
+                with r._out_lock:
+                    busy = bool(r.outgoing)
+                busy = busy or not r.inbox.empty()
+                if not busy:
+                    break
+                if time.time() > deadline:
+                    raise TimeoutError("cluster barrier timeout")
+                time.sleep(0.001)
+        for r in self.ranks:
+            r.runtime.barrier(timeout=max(deadline - time.time(), 1.0))
+
+    def shutdown(self):
+        for r in self.ranks:
+            r.shutdown()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.shutdown()

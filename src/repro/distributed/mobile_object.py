@@ -1,0 +1,109 @@
+"""Mobile objects + owner map (paper §1.1): globally addressable,
+location-independent containers. The owner map is the load-balancing lever —
+migrating a mobile object is an owner-map update plus a data transfer, which
+is how PREMA does implicit distributed load balancing and how we do
+straggler mitigation (move chunks off a slow rank) and elastic rescale
+(re-map chunks of a lost/added rank).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+_ids = itertools.count()
+
+
+@dataclasses.dataclass(frozen=True)
+class MobilePtr:
+    """Global name of a mobile object."""
+    oid: int
+
+    def __int__(self):
+        return self.oid
+
+
+class OwnerMap:
+    """oid -> rank, replicated control state. Deterministic given the event
+    log (assign/migrate), so every rank can replay it."""
+
+    def __init__(self):
+        self._owner: Dict[int, int] = {}
+        self.version = 0
+
+    def assign(self, oid: int, rank: int) -> None:
+        self._owner[oid] = rank
+        self.version += 1
+
+    def owner(self, oid: int) -> int:
+        return self._owner[oid]
+
+    def migrate(self, oid: int, new_rank: int) -> None:
+        self._owner[oid] = new_rank
+        self.version += 1
+
+    def owned_by(self, rank: int) -> List[int]:
+        return [o for o, r in self._owner.items() if r == rank]
+
+    def items(self):
+        return self._owner.items()
+
+    def __len__(self):
+        return len(self._owner)
+
+
+def block_distribution(n_objects: int, n_ranks: int) -> Dict[int, int]:
+    """Contiguous block assignment (the paper's initial decomposition)."""
+    return {i: min(i * n_ranks // n_objects, n_ranks - 1)
+            for i in range(n_objects)}
+
+
+def rebalance_greedy(loads: Dict[int, float], owner: OwnerMap,
+                     chunk_load: Dict[int, float],
+                     max_moves: int = 8) -> List[Tuple[int, int, int]]:
+    """Greedy diffusion: move chunks from the most- to the least-loaded rank.
+    Returns [(oid, src, dst)] migration plan; the caller executes transfers
+    and applies owner.migrate. Used for straggler mitigation: a straggler's
+    effective load is inflated by its slowdown factor."""
+    plan: List[Tuple[int, int, int]] = []
+    loads = dict(loads)
+    for _ in range(max_moves):
+        src = max(loads, key=loads.get)
+        dst = min(loads, key=loads.get)
+        if loads[src] - loads[dst] < 1e-9:
+            break
+        movable = [o for o in owner.owned_by(src)]
+        if not movable:
+            break
+        # smallest chunk that helps
+        movable.sort(key=lambda o: chunk_load.get(o, 1.0))
+        best = None
+        gap = loads[src] - loads[dst]
+        for o in movable:
+            w = chunk_load.get(o, 1.0)
+            if w < gap:
+                best = o
+        if best is None:
+            break
+        w = chunk_load.get(best, 1.0)
+        owner.migrate(best, dst)
+        plan.append((best, src, dst))
+        loads[src] -= w
+        loads[dst] += w
+    return plan
+
+
+class MobileObject:
+    """A chunk of application data bound to an owner rank. Holds a
+    hetero_object on the owner; elsewhere it is just the pointer."""
+
+    def __init__(self, ptr: Optional[MobilePtr] = None,
+                 data: Any = None, meta: Optional[Dict[str, Any]] = None):
+        self.ptr = ptr or MobilePtr(next(_ids))
+        self.data = data            # HeteroObject on the owner rank
+        self.meta = meta or {}
+
+    def __repr__(self):
+        return f"MobileObject(oid={self.ptr.oid}, meta={self.meta})"

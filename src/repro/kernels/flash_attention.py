@@ -1,0 +1,84 @@
+"""Pallas TPU flash-attention forward (beyond-paper perf feature).
+
+Grid (batch·heads, q_blocks, kv_blocks); online softmax with f32 VMEM
+scratch for (acc, m, l). Causal masking by absolute positions. Matches the
+scan-based ``repro.models.attention.flash_attention`` contract (its oracle
+is ``ref.flash_ref``). Block sizes default MXU-aligned (128 lanes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  kv_steps: int, qb: int, kb: int, causal: bool):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]                                   # [qb, d]
+    k = k_ref[0]                                   # [kb, d]
+    v = v_ref[0]
+    sc = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+    sc = sc * (q.shape[-1] ** -0.5)
+    if causal:
+        qpos = qi * qb + jax.lax.broadcasted_iota(jnp.int32, (qb, kb), 0)
+        kpos = ki * kb + jax.lax.broadcasted_iota(jnp.int32, (qb, kb), 1)
+        sc = jnp.where(kpos <= qpos, sc, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, sc.max(axis=-1))
+    p = jnp.exp(sc - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + \
+        jnp.dot(p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == kv_steps - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "qb", "kb", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, qb: int = 128, kb: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: [BH, S, D]; k, v: [BH, T, D] (batch·heads folded; GQA pre-broadcast).
+    Returns [BH, S, D]."""
+    bh, s, d = q.shape
+    t = k.shape[1]
+    qb, kb = min(qb, s), min(kb, t)
+    assert s % qb == 0 and t % kb == 0
+    grid = (bh, s // qb, t // kb)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, kv_steps=t // kb, qb=qb, kb=kb,
+                          causal=causal),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, qb, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, kb, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, kb, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, qb, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qb, d), jnp.float32),
+            pltpu.VMEM((qb,), jnp.float32),
+            pltpu.VMEM((qb,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

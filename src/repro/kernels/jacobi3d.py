@@ -1,0 +1,55 @@
+"""Pallas TPU Jacobi-3D stencil (the proxy application's compute kernel).
+
+Input is the halo-padded slab [X+2, Y+2, Z+2]; output the updated interior
+[X, Y, Z]. The grid tiles the x dimension; each program reads its own tile
+plus both x-neighbour tiles (three BlockSpecs over the same operand — the
+TPU-idiomatic way to express ±1 halo reads without dynamic HBM loads), and
+the full Y/Z planes, which keeps the VMEM working set to
+3·(bx+?)·(Y+2)·(Z+2)·4B — pick bx so that fits ~16 MB VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _jacobi_kernel(prev_ref, cur_ref, nxt_ref, o_ref, *, bx: int,
+                   x_tiles: int):
+    # the three operands are x-shifted views tiled identically, so row j of
+    # prev/nxt IS the x∓1 neighbour of interior row j — no cross-tile reads
+    up = prev_ref[...]                      # [bx, Y+2, Z+2]
+    cur = cur_ref[...]
+    dn = nxt_ref[...]
+    out = (up[:, 1:-1, 1:-1] + dn[:, 1:-1, 1:-1] +
+           cur[:, :-2, 1:-1] + cur[:, 2:, 1:-1] +
+           cur[:, 1:-1, :-2] + cur[:, 1:-1, 2:]) / 6.0
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bx", "interpret"))
+def jacobi3d(u_pad: jax.Array, *, bx: int = 8,
+             interpret: bool = False) -> jax.Array:
+    """u_pad: [X+2, Y+2, Z+2] halo-padded slab → updated interior [X,Y,Z]."""
+    xp, yp, zp = u_pad.shape
+    x = xp - 2
+    bx = min(bx, x)
+    assert x % bx == 0, (x, bx)
+    x_tiles = x // bx
+    # interior rows live at u_pad[1:X+1]; tile t covers rows [1+t*bx, 1+(t+1)*bx)
+    # we pass u_pad[1:-1] (interior rows) as the tiled operand and the padded
+    # array twice more with shifted maps for the ±1 rows.
+    interior = u_pad[1:-1]                        # [X, Y+2, Z+2]
+    prev = u_pad[:-2]                             # row x-1 for interior row x
+    nxt = u_pad[2:]                               # row x+1
+    spec = pl.BlockSpec((bx, yp, zp), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        functools.partial(_jacobi_kernel, bx=bx, x_tiles=x_tiles),
+        grid=(x_tiles,),
+        in_specs=[spec, spec, spec],
+        out_specs=pl.BlockSpec((bx, yp - 2, zp - 2), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((x, yp - 2, zp - 2), u_pad.dtype),
+        interpret=interpret,
+    )(prev, interior, nxt)

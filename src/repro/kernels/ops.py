@@ -1,0 +1,39 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU so the same call sites work in the
+CPU container (kernel bodies execute in Python) and compile to Mosaic on
+real hardware.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.jacobi3d import jacobi3d as _jacobi3d
+from repro.kernels.matmul import matmul as _matmul
+from repro.kernels.ssd import ssd_chunk as _ssd_chunk
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def matmul(a, b, **kw):
+    kw.setdefault("interpret", _default_interpret())
+    return _matmul(a, b, **kw)
+
+
+def jacobi3d(u_pad, **kw):
+    kw.setdefault("interpret", _default_interpret())
+    return _jacobi3d(u_pad, **kw)
+
+
+def ssd_chunk(x, dt, A, B, C, **kw):
+    kw.setdefault("interpret", _default_interpret())
+    return _ssd_chunk(x, dt, A, B, C, **kw)
+
+
+def flash_attention(q, k, v, **kw):
+    kw.setdefault("interpret", _default_interpret())
+    return _flash(q, k, v, **kw)

@@ -1,0 +1,306 @@
+"""Roofline analysis from the compiled dry-run artifacts.
+
+Three terms per (arch × shape) on the single-pod mesh:
+
+    t_compute    = FLOPs / (chips × 197 TF/s)
+    t_memory     = HBM bytes / (chips × 819 GB/s)
+    t_collective = collective bytes per device / 50 GB/s per link
+
+Measurement method (documented because XLA's cost model needs correcting):
+``compiled.cost_analysis()`` counts every while-loop body ONCE, independent
+of trip count — so anything under ``lax.scan`` (the layer stack, flash
+attention's q/kv blocks, the chunked CE loss) is undercounted. We correct:
+
+  1. layer-stack scan: probe lowerings with 0 layers (M0) and 1 period (M1)
+     isolate the per-period body; corrected = M_full + (n_periods−1)·(M1−M0).
+     This fixes flops, HBM bytes and collective bytes together (collectives
+     live at layer level).
+  2. flash-attention q/kv scans + CE-loss seq scan: corrected analytically —
+     the block shapes and trip counts are static, so the uncounted work is
+     (trips−1) × body cost. Compute-side attention/loss flops use the exact
+     einsum formulas below.
+  3. compute term primary source: the analytic FLOP model (exact for the
+     math executed, matmul-dominated); the probe-corrected HLO flops are
+     reported alongside as a cross-check.
+
+MODEL_FLOPS = 6·N_active·D (train) / 2·N_active·D (inference forward);
+ratio MODEL/analytic exposes remat + attention overhead honestly.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs import (GLOBAL_ATTN, LOCAL_ATTN, RGLRU, SSD,
+                           SHAPES_BY_NAME, ModelConfig, get_config,
+                           shapes_for, ARCH_IDS)
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+FLASH_BLOCK = 512
+LOSS_CHUNK = 1024
+
+
+# ---------------------------------------------------------------------------
+# analytic FLOP model (forward; totals across the whole job)
+# ---------------------------------------------------------------------------
+
+def _layer_kinds(cfg: ModelConfig) -> List[str]:
+    return [cfg.layer_pattern[i % len(cfg.layer_pattern)]
+            for i in range(cfg.n_layers)]
+
+
+def analytic_forward_flops(cfg: ModelConfig, shape) -> Dict[str, float]:
+    """Returns {'proj':…, 'attn':…, 'mlp':…, 'loss':…, 'total':…} global
+    forward FLOPs for one step of the given shape."""
+    B, S = shape.global_batch, shape.seq_len
+    kind = shape.kind
+    D, H, K, hd = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                   cfg.resolved_head_dim)
+    tokens = B * (S if kind != "decode" else 1)
+    f_proj = f_attn = f_mlp = 0.0
+    for lk in _layer_kinds(cfg):
+        if lk in (GLOBAL_ATTN, LOCAL_ATTN):
+            f_proj += tokens * 2 * D * hd * (2 * H + 2 * K)
+            if kind == "decode":
+                ctx = min(cfg.window, S) if lk == LOCAL_ATTN else S
+                f_attn += tokens * 4 * H * hd * ctx
+            else:
+                ctx = 2 * min(cfg.window, S) if lk == LOCAL_ATTN else S
+                f_attn += B * S * 4 * H * hd * ctx  # our lowering: all blocks
+            if cfg.moe is not None:
+                m = cfg.moe
+                f_mlp += tokens * 2 * D * m.num_experts          # router
+                mult = 6 if cfg.gated_mlp else 4
+                f_mlp += tokens * m.top_k * 1.25 * mult * D * m.d_ff_expert
+                if m.d_ff_shared:
+                    f_mlp += tokens * mult * D * m.d_ff_shared
+            else:
+                f_mlp += tokens * (6 if cfg.gated_mlp else 4) * D * cfg.d_ff
+        elif lk == SSD:
+            sc = cfg.ssm
+            di = sc.expand * D
+            gn = sc.ngroups * sc.d_state
+            nh = di // sc.headdim
+            f_proj += tokens * 2 * D * (2 * di + 2 * gn + nh) + \
+                tokens * 2 * di * D
+            if kind == "decode":
+                f_attn += tokens * 4 * nh * sc.headdim * sc.d_state
+            else:
+                q = min(sc.chunk_size, S)
+                f_attn += B * S * 2 * (q * gn + q * di + 2 * di * sc.d_state)
+        elif lk == RGLRU:
+            w = cfg.rglru.lru_width or D
+            bd = w // cfg.n_heads
+            f_proj += tokens * (2 * D * w * 2 + 2 * w * D)
+            f_attn += tokens * (2 * 2 * w * bd + 10 * w)
+            f_mlp += tokens * (6 if cfg.gated_mlp else 4) * D * cfg.d_ff
+    if cfg.enc_dec:
+        enc_tokens = B * cfg.encoder_seq
+        enc_t_pad = cfg.encoder_seq + ((-cfg.encoder_seq) % 128)
+        for _ in range(cfg.n_encoder_layers):
+            f_proj += enc_tokens * 2 * D * hd * (2 * H + 2 * K) * \
+                (1 if kind != "decode" else 0)
+            if kind != "decode":
+                f_attn += B * cfg.encoder_seq * 4 * H * hd * cfg.encoder_seq
+                f_mlp += enc_tokens * 4 * D * cfg.d_ff
+        # decoder cross attention
+        for _ in range(cfg.n_layers):
+            f_proj += tokens * 2 * D * hd * 2 * H    # q,o (kv cached/enc)
+            if kind != "decode":
+                f_proj += enc_tokens * 2 * D * hd * 2 * K
+            f_attn += tokens * 4 * H * hd * enc_t_pad
+    # loss / unembed
+    if kind == "train":
+        f_loss = tokens * 2 * D * cfg.vocab
+    else:
+        f_loss = B * 2 * D * cfg.vocab       # last position / decode step
+    total = f_proj + f_attn + f_mlp + f_loss
+    return {"proj": f_proj, "attn": f_attn, "mlp": f_mlp, "loss": f_loss,
+            "total": total}
+
+
+def analytic_total_flops(cfg: ModelConfig, shape, remat: str) -> float:
+    fwd = analytic_forward_flops(cfg, shape)["total"]
+    if shape.kind != "train":
+        return fwd
+    mult = 4.0 if remat == "full" else 3.3   # fwd + bwd(2) + recompute
+    return fwd * mult
+
+
+# ---------------------------------------------------------------------------
+# probe-based HLO correction
+# ---------------------------------------------------------------------------
+
+def _load(results_dir: str, arch: str, shape: str, opt: str,
+          probe: Optional[int] = None, pod: str = "pod1") -> Optional[Dict]:
+    tag = f"{arch}__{shape}__{pod}__{opt}"
+    if probe is not None:
+        tag += f"__probe{probe}"
+    path = os.path.join(results_dir, tag + ".json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        d = json.load(f)
+    return None if ("error" in d or d.get("skipped")) else d
+
+
+def corrected_hlo(full: Dict, p0: Optional[Dict], p1: Optional[Dict],
+                  cfg: ModelConfig) -> Dict[str, float]:
+    """Apply the layer-scan correction to flops / bytes / collectives."""
+    n_periods = cfg.n_layers // len(cfg.layer_pattern)
+    out = {}
+    for key in ("flops_per_device", "bytes_per_device",
+                "collective_total_bytes"):
+        v = full.get(key, 0.0) or 0.0
+        if p0 is not None and p1 is not None and n_periods > 1:
+            body = max((p1.get(key, 0.0) or 0.0) - (p0.get(key, 0.0) or 0.0),
+                       0.0)
+            v = v + (n_periods - 1) * body
+        out[key] = v
+    # per-collective-type breakdown with the same scaling
+    colls = dict(full.get("collective_bytes_per_device", {}))
+    if p0 is not None and p1 is not None and n_periods > 1:
+        c0 = p0.get("collective_bytes_per_device", {})
+        c1 = p1.get("collective_bytes_per_device", {})
+        for k in colls:
+            body = max(c1.get(k, 0) - c0.get(k, 0), 0)
+            colls[k] = colls[k] + (n_periods - 1) * body
+    out["collectives"] = colls
+    out["collective_total_bytes"] = float(sum(colls.values())) if colls else \
+        out["collective_total_bytes"]
+    return out
+
+
+def flash_scan_bytes_correction(cfg: ModelConfig, shape, chips: int) -> float:
+    """Uncounted HBM traffic of flash-scan iterations: each q block re-reads
+    the full K/V stream (trips−1 of which the HLO missed)."""
+    if shape.kind == "decode":
+        return 0.0
+    B, S = shape.global_batch, shape.seq_len
+    hd, K = cfg.resolved_head_dim, cfg.n_kv_heads
+    n_global = sum(1 for k in _layer_kinds(cfg) if k == GLOBAL_ATTN)
+    if cfg.enc_dec:
+        n_global += 0  # encoder handled approximately by probe scaling
+    if n_global == 0 or S <= FLASH_BLOCK:
+        return 0.0
+    nq = S // min(FLASH_BLOCK, S)
+    kv_bytes = 2 * B * S * K * hd * 2          # K+V, bf16
+    return n_global * (nq - 1) * kv_bytes / chips
+
+
+def loss_scan_flops(cfg: ModelConfig, shape, chips: int) -> float:
+    if shape.kind != "train":
+        return 0.0
+    B, S = shape.global_batch, shape.seq_len
+    n_chunks = max(S // LOSS_CHUNK, 1)
+    per_chunk = 2 * B * LOSS_CHUNK * cfg.d_model * cfg.vocab
+    return (n_chunks - 1) * per_chunk / chips
+
+
+# ---------------------------------------------------------------------------
+# table builder
+# ---------------------------------------------------------------------------
+
+def analyze_cell(results_dir: str, arch: str, shape_name: str,
+                 opt: str = "baseline") -> Optional[Dict[str, Any]]:
+    full = _load(results_dir, arch, shape_name, opt)
+    if full is None:
+        return None
+    p0 = _load(results_dir, arch, shape_name, opt, probe=0)
+    p1 = _load(results_dir, arch, shape_name, opt, probe=1)
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    chips = full["chips"]
+    hlo = corrected_hlo(full, p0, p1, cfg)
+
+    remat = "full"   # both levels keep full remat (see §Perf iteration 2)
+    ana_flops = analytic_total_flops(cfg, shape, remat) / chips
+    hlo_flops = hlo["flops_per_device"] + loss_scan_flops(cfg, shape, chips)
+    hbm = hlo["bytes_per_device"] + flash_scan_bytes_correction(
+        cfg, shape, chips)
+    coll = hlo["collective_total_bytes"]
+
+    t_compute = ana_flops / PEAK_FLOPS
+    t_memory = hbm / HBM_BW
+    t_coll = coll / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    model_flops = (6 if shape.kind == "train" else 2) * n_active * tokens \
+        / chips
+    bound = max(terms.values())
+    hints = {
+        "compute": "reduce recompute (remat policy) / skip masked attention "
+                   "blocks / higher arithmetic-intensity kernel fusion",
+        "memory": "sequence-parallel activations, smaller remat window, "
+                  "bf16 master-free optimizer or fused loss to cut HBM "
+                  "round-trips",
+        "collective": "reshard to cut per-layer all-gathers "
+                      "(ZeRO placement / SP), fuse small all-reduces, "
+                      "overlap collectives behind the scan",
+    }
+    return {
+        "arch": arch, "shape": shape_name, "opt": opt, "chips": chips,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "bottleneck": bottleneck,
+        "analytic_flops_per_device": ana_flops,
+        "hlo_flops_corrected": hlo_flops,
+        "hlo_flops_raw": full.get("flops_per_device"),
+        "hbm_bytes_corrected": hbm,
+        "collective_bytes_corrected": coll,
+        "collectives": hlo["collectives"],
+        "model_flops_per_device": model_flops,
+        "model_vs_analytic": model_flops / ana_flops if ana_flops else None,
+        "step_time_bound_s": bound,
+        "roofline_fraction": t_compute / bound if bound else None,
+        "memory_temp_bytes": full.get("temp_size_in_bytes"),
+        "memory_args_bytes": full.get("argument_size_in_bytes"),
+        "hint": hints[bottleneck],
+    }
+
+
+def build_table(results_dir: str, opt: str = "baseline") -> List[Dict]:
+    rows = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in shapes_for(cfg):
+            row = analyze_cell(results_dir, arch, shape.name, opt)
+            if row:
+                rows.append(row)
+    return rows
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="benchmarks/results/dryrun")
+    ap.add_argument("--opt", default="baseline")
+    ap.add_argument("--out", default="benchmarks/results/roofline.json")
+    args = ap.parse_args()
+    rows = build_table(args.results, args.opt)
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=2)
+    hdr = (f"{'arch':24s} {'shape':12s} {'compute':>9s} {'memory':>9s} "
+           f"{'coll':>9s} {'bottleneck':>10s} {'roofline%':>9s} "
+           f"{'model/hlo':>9s}")
+    print(hdr)
+    for r in rows:
+        print(f"{r['arch']:24s} {r['shape']:12s} "
+              f"{r['t_compute_s']*1e3:8.1f}ms {r['t_memory_s']*1e3:8.1f}ms "
+              f"{r['t_collective_s']*1e3:8.1f}ms {r['bottleneck']:>10s} "
+              f"{(r['roofline_fraction'] or 0)*100:8.1f}% "
+              f"{(r['model_vs_analytic'] or 0):9.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""Production serving driver: batched prefill + decode engine.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --smoke \
+        --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import canon, get_config, get_smoke_config
+from repro.launch.mesh import make_production_mesh, make_smoke_mesh
+from repro.models import build_model, build_smoke
+from repro.models.layers import unbox
+from repro.models.sharding import use_sharding
+from repro.serve import make_decode_step, make_prefill_step
+
+
+class Engine:
+    """Minimal batched engine: one prefill, then token-by-token decode with a
+    capacity-allocated cache (prefill writes into the decode cache slots)."""
+
+    def __init__(self, model, params, batch: int, max_len: int):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self.batch = batch
+        self._prefill = jax.jit(make_prefill_step(model))
+        self._decode = jax.jit(make_decode_step(model), donate_argnums=(1,))
+
+    def generate(self, tokens: jax.Array, gen: int, extra=None):
+        b, s = tokens.shape
+        cache0 = self.model.init_cache(b, self.max_len)
+        batch = {"tokens": jnp.pad(tokens,
+                                   ((0, 0), (0, self.max_len - s)))}
+        if extra:
+            batch.update(extra)
+        # prefill over padded batch: simple engines prefill at fixed length;
+        # we prefill exactly s tokens then decode
+        batch["tokens"] = tokens
+        nxt, cache = self._prefill(self.params, batch, cache0)
+        # grow prefill cache (length s) into decode capacity
+        def grow(a):
+            if hasattr(a, "ndim"):
+                for ax in range(1, min(a.ndim, 3)):
+                    if a.shape[ax] == s and a.shape[-1] != s:
+                        pad = [(0, 0)] * a.ndim
+                        pad[ax] = (0, self.max_len - s)
+                        return jnp.pad(a, pad)
+            return a
+        cache = jax.tree.map(grow, cache)
+        out = [nxt]
+        lengths = jnp.full((b,), s, jnp.int32)
+        cur = nxt
+        for _ in range(gen - 1):
+            cur, cache = self._decode(self.params, cache, cur, lengths)
+            lengths = lengths + 1
+            out.append(cur)
+        return jnp.concatenate(out, axis=1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--production-mesh", action="store_true")
+    args = ap.parse_args(argv)
+
+    arch = canon(args.arch)
+    cfg = get_smoke_config(arch) if args.smoke else get_config(arch)
+    model = build_smoke(cfg) if args.smoke else build_model(cfg)
+    mesh = make_production_mesh() if args.production_mesh \
+        else make_smoke_mesh(1, 1)
+
+    with use_sharding(mesh):
+        params, _ = unbox(model.init(jax.random.PRNGKey(0)))
+        eng = Engine(model, params, args.batch,
+                     args.prompt_len + args.gen)
+        tokens = jax.random.randint(jax.random.PRNGKey(1),
+                                    (args.batch, args.prompt_len), 0,
+                                    cfg.vocab)
+        extra = {}
+        if cfg.enc_dec:
+            extra["frames"] = jnp.zeros((args.batch, cfg.encoder_seq,
+                                         cfg.d_model))
+        if cfg.frontend == "vision":
+            extra["vision_embeds"] = jnp.zeros(
+                (args.batch, cfg.frontend_tokens, cfg.d_model))
+        t0 = time.time()
+        out = eng.generate(tokens, args.gen, extra)
+        dt = time.time() - t0
+        print(f"generated {out.shape} in {dt:.2f}s "
+              f"({args.batch * args.gen / dt:.1f} tok/s)")
+        print("sample:", np.asarray(out[0][:12]))
+    return out
+
+
+if __name__ == "__main__":
+    main()

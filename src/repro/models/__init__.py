@@ -1,0 +1,2 @@
+from repro.models.model_zoo import Model, build_model, build_smoke  # noqa: F401
+from repro.models.transformer import DEFAULT_FLAGS, Flags, SMOKE_FLAGS  # noqa: F401

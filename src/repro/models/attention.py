@@ -1,0 +1,382 @@
+"""Attention: GQA projections + three execution paths.
+
+- ``flash_attention``: chunked online-softmax attention (pure JAX scan over KV
+  blocks). Memory-bounded: never materializes the full [S, S] score matrix —
+  this is the TPU-native adaptation of a fused attention kernel and is what
+  the compiled dry-run exercises. A Pallas kernel with the same contract
+  lives in ``repro.kernels.flash_attention``.
+- ``window_attention``: exact sliding-window attention via block-banded
+  computation (each query block attends to itself + previous block).
+- ``decode_attention``: single-token attention against a KV cache, with an
+  optional sequence-sharded variant (logsumexp partial combine over the
+  ``data`` mesh axis) used for 500k-token decode where the cache cannot fit
+  on one device row.
+
+Caches for local-attention layers are ring buffers of size ``window``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.sharding import constrain
+
+NEG_INF = -1e30
+
+
+def attn_init(key, d_model: int, n_heads: int, n_kv_heads: int, head_dim: int,
+              dtype=jnp.bfloat16) -> Dict[str, L.Boxed]:
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": L.Boxed(
+            (jax.random.normal(ks[0], (d_model, n_heads, head_dim), jnp.float32)
+             / jnp.sqrt(d_model)).astype(dtype),
+            ("embed", "heads", "head_dim")),
+        "wk": L.Boxed(
+            (jax.random.normal(ks[1], (d_model, n_kv_heads, head_dim), jnp.float32)
+             / jnp.sqrt(d_model)).astype(dtype),
+            ("embed", "kv_heads", "head_dim")),
+        "wv": L.Boxed(
+            (jax.random.normal(ks[2], (d_model, n_kv_heads, head_dim), jnp.float32)
+             / jnp.sqrt(d_model)).astype(dtype),
+            ("embed", "kv_heads", "head_dim")),
+        "wo": L.Boxed(
+            (jax.random.normal(ks[3], (n_heads, head_dim, d_model), jnp.float32)
+             / jnp.sqrt(n_heads * head_dim)).astype(dtype),
+            ("heads", "head_dim", "embed")),
+    }
+
+
+def _split_gqa(q: jax.Array, n_kv: int) -> jax.Array:
+    """[B,S,H,D] -> [B,S,K,G,D]."""
+    b, s, h, d = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, d)
+
+
+# ---------------------------------------------------------------------------
+# Full (causal or bidirectional) chunked attention
+# ---------------------------------------------------------------------------
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    q_positions: jax.Array, kv_positions: jax.Array,
+                    causal: bool = True, q_block: int = 512,
+                    kv_block: int = 512,
+                    kv_valid: Optional[jax.Array] = None) -> jax.Array:
+    """q: [B,S,K,G,D]; k,v: [B,T,K,D]; positions: [S] / [T] (shared across
+    batch); kv_valid: optional [T] bool (padding mask). Returns [B,S,K,G,D].
+
+    Online-softmax attention, scanning over q blocks (outer) and kv blocks
+    (inner): peak live memory is one [B,qb,K,G,kb] score tile — never the
+    full [S,T] matrix. This is the structural analogue of a fused flash
+    kernel; the Pallas version shares this contract."""
+    b, s, kh, g, d = q.shape
+    t = k.shape[1]
+    qb = min(q_block, s)
+    kb = min(kv_block, t)
+    assert s % qb == 0 and t % kb == 0, (s, qb, t, kb)
+    nq, nk = s // qb, t // kb
+    scale = d ** -0.5
+
+    qr = jnp.moveaxis(q.reshape(b, nq, qb, kh, g, d), 1, 0)     # [nq,b,qb,...]
+    kr = jnp.moveaxis(k.reshape(b, nk, kb, kh, d), 1, 0)        # [nk,b,kb,...]
+    vr = jnp.moveaxis(v.reshape(b, nk, kb, kh, d), 1, 0)
+    qpos = q_positions.reshape(nq, qb)
+    kpos = kv_positions.reshape(nk, kb)
+    kval = None if kv_valid is None else kv_valid.reshape(nk, kb)
+
+    def q_body(_, q_in):
+        qblk, qp = q_in                                          # [b,qb,kh,g,d]
+
+        def kv_body(carry, kv_in):
+            acc, m, l = carry
+            kblk, vblk, kp, kvld = kv_in
+            sc = jnp.einsum("bqkgd,bckd->bqkgc", qblk, kblk,
+                            preferred_element_type=jnp.float32) * scale
+            mask = None
+            if causal:
+                mask = kp[None, :] <= qp[:, None]                # [qb,kb]
+            if kvld is not None:
+                km = jnp.broadcast_to(kvld[None, :], (qb, kb))
+                mask = km if mask is None else (mask & km)
+            if mask is not None:
+                sc = jnp.where(mask[None, :, None, None, :], sc, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bqkgc,bckd->bqkgd", p.astype(vblk.dtype), vblk,
+                            preferred_element_type=jnp.float32)
+            return (acc * alpha[..., None] + pv, m_new, l_new), None
+
+        acc0 = jnp.zeros((b, qb, kh, g, d), jnp.float32)
+        m0 = jnp.full((b, qb, kh, g), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, qb, kh, g), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            kv_body, (acc0, m0, l0),
+            (kr, vr, kpos, kval) if kval is not None else (kr, vr, kpos, None))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_body, None, (qr, qpos))             # [nq,b,qb,...]
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, kh, g, d)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Sliding-window attention (exact, block-banded)
+# ---------------------------------------------------------------------------
+
+def window_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     positions: jax.Array, window: int) -> jax.Array:
+    """Causal attention restricted to the last ``window`` positions.
+    q: [B,S,K,G,D], k/v: [B,S,K,D]. Each query block of size W attends to
+    (block-1, block) — exact for window size W. Ragged S is padded internally
+    (padded keys get +inf positions and are never attended)."""
+    b, s, kh, g, d = q.shape
+    w = min(window, s)
+    pad = (-s) % w
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad)) + ((0, 0),) * 3)
+        k = jnp.pad(k, ((0, 0), (0, pad)) + ((0, 0),) * 2)
+        v = jnp.pad(v, ((0, 0), (0, pad)) + ((0, 0),) * 2)
+        positions = jnp.concatenate(
+            [positions, jnp.full((pad,), 2**30, jnp.int32)])
+    s_orig, s = s, s + pad
+    nb = s // w
+    scale = d ** -0.5
+
+    qr = q.reshape(b, nb, w, kh, g, d)
+    kr = k.reshape(b, nb, w, kh, d)
+    vr = v.reshape(b, nb, w, kh, d)
+    # previous block (zeros for block 0, masked out by positions)
+    kprev = jnp.concatenate([jnp.zeros_like(kr[:, :1]), kr[:, :-1]], axis=1)
+    vprev = jnp.concatenate([jnp.zeros_like(vr[:, :1]), vr[:, :-1]], axis=1)
+    kcat = jnp.concatenate([kprev, kr], axis=2)        # [b,nb,2w,kh,d]
+    vcat = jnp.concatenate([vprev, vr], axis=2)
+
+    pos = positions.reshape(nb, w)
+    pprev = jnp.concatenate([jnp.full_like(pos[:1], -10**9), pos[:-1]], axis=0)
+    pcat = jnp.concatenate([pprev, pos], axis=1)       # [nb,2w]
+
+    sc = jnp.einsum("bnqkgd,bnckd->bnqkgc", qr, kcat,
+                    preferred_element_type=jnp.float32) * scale
+    valid = (pcat[:, None, :] <= pos[:, :, None]) & \
+            (pos[:, :, None] - pcat[:, None, :] < w)   # [nb,w,2w]
+    sc = jnp.where(valid[None, :, :, None, None, :], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bnqkgc,bnckd->bnqkgd", p.astype(vcat.dtype), vcat,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, s, kh, g, d).astype(q.dtype)
+    return out[:, :s_orig]
+
+
+# ---------------------------------------------------------------------------
+# Decode attention
+# ---------------------------------------------------------------------------
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, *,
+                     valid: jax.Array) -> jax.Array:
+    """q: [B,K,G,D] (single step), cache: [B,T,K,D], valid: [B,T] bool."""
+    d = q.shape[-1]
+    sc = jnp.einsum("bkgd,btkd->bkgt", q, k_cache,
+                    preferred_element_type=jnp.float32) * d ** -0.5
+    sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def decode_attention_partial(q: jax.Array, k_cache: jax.Array,
+                             v_cache: jax.Array, *, valid: jax.Array,
+                             axis_name: str) -> jax.Array:
+    """Sequence-sharded decode: each shard holds a slice of the KV cache along
+    T; partial attention is combined with a logsumexp reduction over
+    ``axis_name``. Call inside shard_map. Collective volume: O(B·H·D) per
+    shard instead of all-gathering O(B·T·K·D) of cache."""
+    d = q.shape[-1]
+    sc = jnp.einsum("bkgd,btkd->bkgt", q, k_cache,
+                    preferred_element_type=jnp.float32) * d ** -0.5
+    sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
+    m_loc = jnp.max(sc, axis=-1)                                  # [b,k,g]
+    m_glob = jax.lax.pmax(m_loc, axis_name)
+    p = jnp.exp(sc - m_glob[..., None])
+    l_loc = jnp.sum(p, axis=-1)
+    o_loc = jnp.einsum("bkgt,btkd->bkgd", p.astype(v_cache.dtype), v_cache,
+                       preferred_element_type=jnp.float32)
+    l_glob = jax.lax.psum(l_loc, axis_name)
+    o_glob = jax.lax.psum(o_loc, axis_name)
+    out = o_glob / jnp.maximum(l_glob[..., None], 1e-30)
+    return out.astype(q.dtype)
+
+
+def _pallas_flash(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Route [B,S,K,G,D] GQA attention through the Pallas kernel
+    ([BH, S, D] contract, heads folded, KV broadcast)."""
+    from repro.kernels import ops
+    b, s, kh, g, d = q.shape
+    qf = q.transpose(0, 2, 3, 1, 4).reshape(b * kh * g, s, d)
+    kf = jnp.broadcast_to(k.transpose(0, 2, 1, 3)[:, :, None],
+                          (b, kh, g, s, d)).reshape(b * kh * g, s, d)
+    vf = jnp.broadcast_to(v.transpose(0, 2, 1, 3)[:, :, None],
+                          (b, kh, g, s, d)).reshape(b * kh * g, s, d)
+    out = ops.flash_attention(qf, kf, vf, causal=True)
+    return out.reshape(b, kh, g, s, d).transpose(0, 3, 1, 2, 4)
+
+
+def seq_sharded_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                       *, valid: jax.Array, axis: str = "data") -> jax.Array:
+    """shard_map wrapper around ``decode_attention_partial``: KV cache seq
+    dim sharded over ``axis``; result combined with logsumexp partials —
+    O(B·H·D) psum instead of an O(B·T·K·D) cache all-gather.
+    q: [B,K,G,D]; cache: [B,T,K,D]; valid: [B,T].
+
+    axis='data' serves long-context decode (batch too small to shard);
+    axis='model' serves kv-head-replicated GQA archs (kv % TP != 0), where
+    it removes both the per-layer cache all-gather and 1/TP of the cache
+    HBM footprint."""
+    from jax.sharding import PartitionSpec as PS
+    from repro.models.sharding import active_mesh
+
+    mesh = active_mesh()
+    if mesh is None or axis not in mesh.shape or mesh.shape[axis] == 1 \
+            or k_cache.shape[1] % mesh.shape[axis] != 0:
+        return decode_attention(q, k_cache, v_cache, valid=valid)
+    # batch sharding (manual, no collectives over it)
+    b = q.shape[0]
+    baxes = tuple(a for a in ("pod", "data") if a in mesh.shape and a != axis)
+    bsize = 1
+    for a in baxes:
+        bsize *= mesh.shape[a]
+    bspec = None
+    if baxes and b % bsize == 0:
+        bspec = baxes if len(baxes) > 1 else baxes[0]
+    # kv-head sharding only if 'model' is not the seq axis
+    msize = mesh.shape.get("model", 1)
+    khead = "model" if (axis != "model" and "model" in mesh.shape
+                        and msize > 1 and q.shape[1] % msize == 0) else None
+
+    def body(qs, ks, vs, vld):
+        return decode_attention_partial(qs, ks, vs, valid=vld, axis_name=axis)
+
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(PS(bspec, khead), PS(bspec, axis, khead),
+                  PS(bspec, axis, khead), PS(bspec, axis)),
+        out_specs=PS(bspec, khead),
+    )(q, k_cache, v_cache, valid)
+
+
+# ---------------------------------------------------------------------------
+# Full attention layer (projection + rope + path dispatch + cache handling)
+# ---------------------------------------------------------------------------
+
+def init_attn_cache(batch: int, cache_len: int, n_kv: int, head_dim: int,
+                    dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    shape = (batch, cache_len, n_kv, head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def attention_layer(params, x: jax.Array, *, kind: str, window: int,
+                    rope_theta: float, n_kv_heads: int,
+                    mode: str, lengths: Optional[jax.Array] = None,
+                    cache: Optional[Dict[str, jax.Array]] = None,
+                    causal: bool = True,
+                    seq_shard_axis: Optional[str] = None,
+                    use_rope: bool = True,
+                    kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,
+                    kv_valid: Optional[jax.Array] = None,
+                    use_pallas: bool = False,
+                    ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """One attention layer. mode: 'train' | 'prefill' | 'decode'.
+
+    kind: 'global_attn' | 'local_attn'. For decode, ``lengths`` [B] gives the
+    current sequence length of every request (the new token goes to position
+    lengths[b]). Local layers use a ring-buffer cache of size ``window``.
+    ``kv_override`` supplies externally computed k/v (cross-attention).
+    """
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    q = constrain(q, "act_batch", None, "act_heads", None)
+
+    if kv_override is None:
+        k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    else:
+        k, v = kv_override
+
+    if mode in ("train", "prefill"):
+        positions = jnp.arange(s, dtype=jnp.int32)
+        if use_rope:
+            q = L.apply_rope(q, positions, rope_theta)
+            if kv_override is None:
+                k = L.apply_rope(k, positions, rope_theta)
+        qg = _split_gqa(q, n_kv_heads)
+        if kind == "local_attn" and kv_override is None:
+            out = window_attention(qg, k, v, positions=positions, window=window)
+        elif use_pallas and causal and k.shape[1] == s and s % 128 == 0:
+            out = _pallas_flash(qg, k, v)
+        else:
+            out = flash_attention(qg, k, v, q_positions=positions,
+                                  kv_positions=jnp.arange(k.shape[1], dtype=jnp.int32),
+                                  causal=causal)
+        new_cache = None
+        if mode == "prefill" and kv_override is None:
+            if kind == "local_attn":
+                # ring-buffer cache: slot j must hold the position p with
+                # p % w == j; roll aligns the last-window slice to slots.
+                w = min(window, s)
+                new_cache = {"k": jnp.roll(k[:, s - w:], s % w, axis=1),
+                             "v": jnp.roll(v[:, s - w:], s % w, axis=1)}
+            else:
+                new_cache = {"k": k, "v": v}
+    elif mode == "decode":
+        assert lengths is not None and (cache is not None or
+                                        kv_override is not None)
+        # new token position = lengths[b]
+        pos = lengths.astype(jnp.int32)                       # [B]
+        if use_rope:
+            q = L.apply_rope(q, pos[:, None], rope_theta)
+            if kv_override is None:
+                k = L.apply_rope(k, pos[:, None], rope_theta)
+        qd = _split_gqa(q, n_kv_heads)[:, 0]                  # [B,K,G,D]
+        if kv_override is not None:
+            t = k.shape[1]
+            valid = jnp.ones((b, t), bool) if kv_valid is None else \
+                jnp.broadcast_to(kv_valid[None, :], (b, t))
+            out = decode_attention(qd, k, v, valid=valid)[:, None]
+            new_cache = None
+        else:
+            t = cache["k"].shape[1]
+            if kind == "local_attn":
+                slot = pos % t                                 # ring buffer
+            else:
+                slot = pos
+            k_cache = jax.vmap(lambda c, kn, i: jax.lax.dynamic_update_slice(
+                c, kn, (i, 0, 0)))(cache["k"], k, slot)
+            v_cache = jax.vmap(lambda c, vn, i: jax.lax.dynamic_update_slice(
+                c, vn, (i, 0, 0)))(cache["v"], v, slot)
+            iota = jnp.arange(t, dtype=jnp.int32)[None, :]
+            if kind == "local_attn":
+                valid = iota < jnp.minimum(pos + 1, t)[:, None]
+            else:
+                valid = iota <= pos[:, None]
+            if seq_shard_axis is not None and kind == "global_attn":
+                out = seq_sharded_decode(qd, k_cache, v_cache, valid=valid,
+                                         axis=seq_shard_axis)[:, None]
+            else:
+                out = decode_attention(qd, k_cache, v_cache, valid=valid)[:, None]
+            new_cache = {"k": k_cache, "v": v_cache}
+    else:
+        raise ValueError(mode)
+
+    wo = params["wo"]                                        # [H, D, M]
+    wo4 = wo.reshape(n_kv_heads, wo.shape[0] // n_kv_heads, wo.shape[1],
+                     wo.shape[2])
+    y = jnp.einsum("bskgd,kgdm->bsm", out.astype(x.dtype), wo4)
+    y = constrain(y, "act_batch", "act_seq", "act_embed")
+    return y, new_cache

@@ -1,0 +1,218 @@
+"""Whisper-style encoder-decoder backbone (audio frontend is a STUB).
+
+``input_specs()`` provides precomputed frame embeddings (batch, enc_seq,
+d_model) — the conv1d mel frontend of the paper is out of scope per the
+brief. Encoder: bidirectional attention with sinusoidal positions. Decoder:
+causal self-attention (cached) + cross-attention to the encoder output
+(cross K/V cached at prefill), learned positional embeddings, GELU MLPs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models.sharding import constrain
+from repro.models.transformer import Flags, DEFAULT_FLAGS
+
+
+def _sinusoids(length: int, channels: int) -> jax.Array:
+    lt = np.log(10000.0) / (channels // 2 - 1)
+    inv = jnp.exp(-lt * jnp.arange(channels // 2, dtype=jnp.float32))
+    t = jnp.arange(length, dtype=jnp.float32)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(t), jnp.cos(t)], axis=1)
+
+
+def _enc_block_init(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "norm1": L.scale_init(cfg.d_model),
+        "attn": A.attn_init(ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                            cfg.resolved_head_dim, dtype),
+        "norm2": L.scale_init(cfg.d_model),
+        "mlp": L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.gated_mlp, dtype),
+    }
+
+
+def _dec_block_init(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "norm1": L.scale_init(cfg.d_model),
+        "self_attn": A.attn_init(ks[0], cfg.d_model, cfg.n_heads,
+                                 cfg.n_kv_heads, cfg.resolved_head_dim, dtype),
+        "norm_x": L.scale_init(cfg.d_model),
+        "cross_attn": A.attn_init(ks[1], cfg.d_model, cfg.n_heads,
+                                  cfg.n_kv_heads, cfg.resolved_head_dim, dtype),
+        "norm2": L.scale_init(cfg.d_model),
+        "mlp": L.mlp_init(ks[2], cfg.d_model, cfg.d_ff, cfg.gated_mlp, dtype),
+    }
+
+
+def encdec_init(key, cfg: ModelConfig, flags: Flags = DEFAULT_FLAGS):
+    dtype = flags.param_dtype
+    ks = jax.random.split(key, 5)
+    params = {
+        "embed": L.embed_init(ks[0], cfg.vocab, cfg.d_model, dtype),
+        "pos_embed": L.Boxed(
+            (jax.random.normal(ks[1], (cfg.max_seq, cfg.d_model), jnp.float32)
+             * 0.01).astype(dtype), (None, "embed")),
+        "enc_final_norm": L.scale_init(cfg.d_model),
+        "final_norm": L.scale_init(cfg.d_model),
+        "unembed": L.dense_init(ks[2], cfg.d_model, cfg.vocab,
+                                ("embed", "vocab"), dtype),
+    }
+    ek = jax.random.split(ks[3], cfg.n_encoder_layers)
+    params["encoder"] = jax.tree.map(
+        lambda b: L.Boxed(b.value, ("layers",) + tuple(b.axes)),
+        jax.vmap(lambda k: _enc_block_init(k, cfg, dtype))(ek),
+        is_leaf=lambda x: isinstance(x, L.Boxed))
+    dk = jax.random.split(ks[4], cfg.n_layers)
+    params["decoder"] = jax.tree.map(
+        lambda b: L.Boxed(b.value, ("layers",) + tuple(b.axes)),
+        jax.vmap(lambda k: _dec_block_init(k, cfg, dtype))(dk),
+        is_leaf=lambda x: isinstance(x, L.Boxed))
+    return params
+
+
+def encode(params, frames: jax.Array, cfg: ModelConfig,
+           flags: Flags = DEFAULT_FLAGS) -> jax.Array:
+    """frames: [B, enc_S, D] (precomputed frame embeddings — STUB frontend)."""
+    x = frames + _sinusoids(frames.shape[1], cfg.d_model).astype(frames.dtype)
+    x = constrain(x, "act_batch", "act_seq", "act_embed")
+
+    def body(x, p):
+        h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+        mix, _ = A.attention_layer(
+            p["attn"], h, kind="global_attn", window=0, rope_theta=0.0,
+            n_kv_heads=cfg.n_kv_heads, mode="train", causal=False,
+            use_rope=False)
+        x = x + mix
+        h = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+        return x + L.mlp_apply(p["mlp"], h, cfg.gated_mlp), None
+
+    if flags.remat != "none":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return L.rms_norm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+def _cross_kv(p, enc_out: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["cross_attn"]["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["cross_attn"]["wv"])
+    return k, v
+
+
+def _dec_block(p, x, *, cfg: ModelConfig, mode: str, flags: Flags,
+               cache: Optional[Dict], lengths, enc_out: Optional[jax.Array],
+               enc_valid: Optional[jax.Array]):
+    h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    mix, new_self = A.attention_layer(
+        p["self_attn"], h, kind="global_attn", window=0, rope_theta=0.0,
+        n_kv_heads=cfg.n_kv_heads, mode=mode, lengths=lengths,
+        cache=None if cache is None else cache["self"], use_rope=False)
+    x = x + mix
+    # cross attention
+    h = L.rms_norm(x, p["norm_x"], cfg.norm_eps)
+    if mode == "decode":
+        ck, cv = cache["cross"]["k"], cache["cross"]["v"]
+        enc_valid = jnp.arange(ck.shape[1]) < cfg.encoder_seq
+    else:
+        ck, cv = _cross_kv(p, enc_out)
+    if mode in ("train", "prefill"):
+        q = jnp.einsum("bsd,dhk->bshk", h, p["cross_attn"]["wq"])
+        qg = q.reshape(q.shape[0], q.shape[1], cfg.n_kv_heads, -1, q.shape[-1])
+        t = ck.shape[1]
+        out = A.flash_attention(
+            qg, ck, cv,
+            q_positions=jnp.arange(h.shape[1], dtype=jnp.int32),
+            kv_positions=jnp.arange(t, dtype=jnp.int32),
+            causal=False, kv_valid=enc_valid)
+        wo = p["cross_attn"]["wo"]
+        wo4 = wo.reshape(cfg.n_kv_heads, wo.shape[0] // cfg.n_kv_heads,
+                         wo.shape[1], wo.shape[2])
+        mix = jnp.einsum("bskgd,kgdm->bsm", out.astype(x.dtype), wo4)
+    else:
+        mix, _ = A.attention_layer(
+            p["cross_attn"], h, kind="global_attn", window=0, rope_theta=0.0,
+            n_kv_heads=cfg.n_kv_heads, mode="decode", lengths=lengths,
+            use_rope=False, kv_override=(ck, cv), kv_valid=enc_valid)
+    x = x + mix
+    h = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+    x = x + L.mlp_apply(p["mlp"], h, cfg.gated_mlp)
+    new_cache = None
+    if mode != "train":
+        new_cache = {"self": new_self,
+                     "cross": {"k": ck, "v": cv} if mode == "prefill"
+                     else cache["cross"]}
+    return x, new_cache
+
+
+def encdec_apply(params, batch: Dict[str, jax.Array], *, cfg: ModelConfig,
+                 mode: str, flags: Flags = DEFAULT_FLAGS,
+                 cache: Optional[Dict] = None
+                 ) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
+    """Returns (decoder hidden [B,S,D], new_cache, aux=0). For train/prefill,
+    batch must contain 'frames'; decode uses the cached cross K/V."""
+    tokens = batch["tokens"]
+    lengths = batch.get("lengths")
+    b, s = tokens.shape
+    enc_out = None
+    enc_valid = None
+    if mode in ("train", "prefill"):
+        frames = batch["frames"]
+        # pad encoder seq to a flash-block multiple, mask the padding
+        t = frames.shape[1]
+        tpad = (-t) % 128
+        enc_valid = jnp.arange(t + tpad) < t
+        if tpad:
+            frames = jnp.pad(frames, ((0, 0), (0, tpad), (0, 0)))
+        enc_out = encode(params, frames, cfg, flags)
+
+    if mode == "decode":
+        pos = lengths.astype(jnp.int32)[:, None]          # [B,1]
+        pe = jnp.take(params["pos_embed"], pos[:, 0], axis=0)[:, None]
+    else:
+        pe = params["pos_embed"][None, :s]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = x + pe.astype(x.dtype)
+    x = constrain(x, "act_batch", "act_seq", "act_embed")
+
+    def body(x, inp):
+        p, c = inp
+        x, new_c = _dec_block(p, x, cfg=cfg, mode=mode, flags=flags, cache=c,
+                              lengths=lengths, enc_out=enc_out,
+                              enc_valid=enc_valid)
+        return x, new_c
+
+    if flags.remat != "none" and mode == "train":
+        body = jax.checkpoint(body)
+    if mode == "train":
+        x, _ = jax.lax.scan(lambda xx, p: body(xx, (p, None)), x,
+                            params["decoder"])
+        new_cache = None
+    else:
+        x, new_dec_cache = jax.lax.scan(body, x,
+                                        (params["decoder"], cache["decoder"]))
+        new_cache = {"decoder": new_dec_cache}
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, new_cache, jnp.zeros((), jnp.float32)
+
+
+def encdec_init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                      flags: Flags = DEFAULT_FLAGS):
+    dtype = flags.param_dtype
+    enc_t = cfg.encoder_seq + ((-cfg.encoder_seq) % 128)
+
+    def one(_):
+        return {
+            "self": A.init_attn_cache(batch, cache_len, cfg.n_kv_heads,
+                                      cfg.resolved_head_dim, dtype),
+            "cross": A.init_attn_cache(batch, enc_t, cfg.n_kv_heads,
+                                       cfg.resolved_head_dim, dtype),
+        }
+    return {"decoder": jax.vmap(one)(jnp.arange(cfg.n_layers))}

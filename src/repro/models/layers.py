@@ -1,0 +1,155 @@
+"""Core neural-net building blocks (pure JAX, no flax).
+
+Parameter initializers return pytrees whose leaves are ``Boxed`` values
+carrying both the array and its *logical* sharding axes. ``unbox`` splits the
+tree into (params, logical_axes) so the launch layer can resolve real
+``NamedSharding``s while smoke tests simply discard the axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.sharding import constrain
+
+
+@dataclasses.dataclass
+class Boxed:
+    value: Any
+    axes: Tuple[Optional[str], ...]
+
+
+jax.tree_util.register_pytree_node(
+    Boxed,
+    lambda b: ((b.value,), tuple(b.axes)),
+    lambda axes, children: Boxed(children[0], axes),
+)
+
+
+def _is_boxed(x) -> bool:
+    return isinstance(x, Boxed)
+
+
+def unbox(tree):
+    params = jax.tree.map(lambda b: b.value, tree, is_leaf=_is_boxed)
+    axes = jax.tree.map(lambda b: b.axes, tree, is_leaf=_is_boxed)
+    return params, axes
+
+
+def boxed_abstract(tree):
+    """Like unbox but maps values to ShapeDtypeStructs (no allocation)."""
+    params = jax.tree.map(
+        lambda b: jax.ShapeDtypeStruct(b.value.shape, b.value.dtype), tree,
+        is_leaf=_is_boxed)
+    axes = jax.tree.map(lambda b: b.axes, tree, is_leaf=_is_boxed)
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# Initializers. For AOT dry-runs we must never materialize 27B parameters on
+# the host, so inits can run in "abstract" mode producing ShapeDtypeStruct
+# leaves (via jax.eval_shape at the model level).
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, axes, dtype=jnp.bfloat16,
+               scale: Optional[float] = None) -> Boxed:
+    scale = scale if scale is not None else 1.0 / np.sqrt(in_dim)
+    w = jax.random.normal(key, (in_dim, out_dim), dtype=jnp.float32) * scale
+    return Boxed(w.astype(dtype), axes)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.bfloat16) -> Boxed:
+    w = jax.random.normal(key, (vocab, dim), dtype=jnp.float32) * 0.02
+    return Boxed(w.astype(dtype), ("vocab", "embed"))
+
+
+def scale_init(dim: int, axes=("embed",), dtype=jnp.float32, value=1.0) -> Boxed:
+    return Boxed(jnp.full((dim,), value, dtype=dtype), axes)
+
+
+# ---------------------------------------------------------------------------
+# Normalization
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., seq, heads, head_dim]; positions: broadcastable to [..., seq]."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)                   # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs   # [..., seq, hd/2]
+    sin = jnp.sin(angles)[..., None, :]                         # add heads dim
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, gated: bool, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 3)
+    p = {
+        "wi": dense_init(ks[0], d_model, d_ff, ("embed", "mlp"), dtype),
+        "wo": dense_init(ks[1], d_ff, d_model, ("mlp", "embed"), dtype),
+    }
+    if gated:
+        p["wg"] = dense_init(ks[2], d_model, d_ff, ("embed", "mlp"), dtype)
+    return p
+
+
+def mlp_apply(p, x: jax.Array, gated: bool) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, p["wi"])
+    if gated:
+        g = jnp.einsum("...d,df->...f", x, p["wg"])
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = constrain(h, "act_batch", "act_seq", "act_mlp")
+    return jnp.einsum("...f,fd->...d", h, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Misc
+# ---------------------------------------------------------------------------
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean token cross-entropy; logits [..., V] fp32-safe."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

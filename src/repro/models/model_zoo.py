@@ -1,0 +1,107 @@
+"""Unified model facade: build any assigned architecture from its config.
+
+``Model`` exposes:
+  init(key)                -> boxed param tree (use layers.unbox)
+  apply(params, batch, mode, cache) -> (hidden, new_cache, aux_loss)
+  init_cache(batch, cache_len)      -> cache pytree
+  input_specs(shape)       -> dict of ShapeDtypeStructs for the dry-run
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec as ED
+from repro.models import transformer as T
+from repro.models.transformer import DEFAULT_FLAGS, Flags, SMOKE_FLAGS
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    flags: Flags = DEFAULT_FLAGS
+
+    def init(self, key):
+        if self.cfg.enc_dec:
+            return ED.encdec_init(key, self.cfg, self.flags)
+        return T.lm_init(key, self.cfg, self.flags)
+
+    def init_abstract(self):
+        """Boxed tree of ShapeDtypeStructs — no host allocation (dry-run)."""
+        from repro.models.layers import Boxed
+
+        def go():
+            return self.init(jax.random.PRNGKey(0))
+        shapes = jax.eval_shape(go)
+        # eval_shape maps Boxed dataclass leaves transparently? Boxed is not a
+        # pytree node, so instead: run init under eval_shape via closure that
+        # unboxes, and rebuild axes from a cheap tiny init. Handled in
+        # launch.dryrun via lm_abstract().
+        return shapes
+
+    def apply(self, params, batch: Dict[str, jax.Array], *, mode: str,
+              cache: Optional[Dict] = None):
+        if self.cfg.enc_dec:
+            return ED.encdec_apply(params, batch, cfg=self.cfg, mode=mode,
+                                   flags=self.flags, cache=cache)
+        return T.lm_apply(params, batch, cfg=self.cfg, mode=mode,
+                          flags=self.flags, cache=cache)
+
+    def init_cache(self, batch: int, cache_len: int):
+        if self.cfg.enc_dec:
+            return ED.encdec_init_cache(self.cfg, batch, cache_len, self.flags)
+        return T.lm_init_cache(self.cfg, batch, cache_len, self.flags)
+
+    def unembed(self, params, x):
+        if self.cfg.enc_dec:
+            return jnp.einsum("bsd,dv->bsv", x, params["unembed"])
+        return T.unembed(params, x, self.cfg)
+
+    def loss(self, params, x, labels):
+        if self.cfg.enc_dec:
+            w = params["unembed"]
+            logits = jnp.einsum("bsd,dv->bsv", x, w).astype(jnp.float32)
+            from repro.models.layers import softmax_cross_entropy
+            return softmax_cross_entropy(logits, labels)
+        return T.chunked_ce_loss(params, x, labels, self.cfg, self.flags)
+
+    # ------------------------------------------------------------------
+    # Input specs (ShapeDtypeStruct stand-ins — never allocate)
+    # ------------------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        sds = jax.ShapeDtypeStruct
+        if shape.kind == "train":
+            specs = {
+                "tokens": sds((b, s), i32),
+                "labels": sds((b, s), i32),
+            }
+        elif shape.kind == "prefill":
+            specs = {"tokens": sds((b, s), i32)}
+        else:  # decode: one new token against a cache of length s
+            specs = {
+                "tokens": sds((b, 1), i32),
+                "lengths": sds((b,), i32),
+            }
+        if cfg.frontend == "vision" and shape.kind != "decode":
+            specs["vision_embeds"] = sds(
+                (b, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16)
+        if cfg.enc_dec and shape.kind != "decode":
+            specs["frames"] = sds((b, cfg.encoder_seq, cfg.d_model),
+                                  jnp.bfloat16)
+        return specs
+
+
+def build_model(cfg: ModelConfig, flags: Flags = DEFAULT_FLAGS) -> Model:
+    return Model(cfg, flags)
+
+
+def build_smoke(cfg: ModelConfig, **overrides) -> Model:
+    flags = dataclasses.replace(SMOKE_FLAGS, **overrides)
+    return Model(cfg, flags)

@@ -1,0 +1,193 @@
+"""Mixture-of-Experts FFN with top-k routing.
+
+Two execution paths:
+
+- ``moe_dense``: oracle path — computes every expert on every token and
+  combines with routing weights. Exact, used for smoke tests and as the
+  reference for the EP path's correctness tests.
+- ``moe_ep``: production path — fixed-capacity GShard-style expert
+  parallelism inside ``shard_map``: tokens are slotted into per-expert
+  capacity buffers, exchanged with ``all_to_all`` over the ``model`` mesh
+  axis, processed as dense batched matmuls on the expert owner, and combined
+  back. FLOPs scale with top_k·capacity_factor, not num_experts.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import MoEConfig
+from repro.models import layers as L
+from repro.models.sharding import active_mesh, constrain, resolve_spec
+
+from jax.sharding import PartitionSpec as PS
+
+
+def moe_init(key, d_model: int, mcfg: MoEConfig, gated: bool,
+             dtype=jnp.bfloat16) -> Dict:
+    ks = jax.random.split(key, 6)
+    e, ff = mcfg.num_experts, mcfg.d_ff_expert
+    sc = 1.0 / np.sqrt(d_model)
+    p = {
+        "router": L.Boxed(
+            (jax.random.normal(ks[0], (d_model, e), jnp.float32) * sc
+             ).astype(jnp.float32), ("embed", "experts")),
+        "wi": L.Boxed(
+            (jax.random.normal(ks[1], (e, d_model, ff), jnp.float32) * sc
+             ).astype(dtype), ("experts", "embed", "expert_mlp")),
+        "wo": L.Boxed(
+            (jax.random.normal(ks[2], (e, ff, d_model), jnp.float32)
+             / np.sqrt(ff)).astype(dtype), ("experts", "expert_mlp", "embed")),
+    }
+    if gated:
+        p["wg"] = L.Boxed(
+            (jax.random.normal(ks[3], (e, d_model, ff), jnp.float32) * sc
+             ).astype(dtype), ("experts", "embed", "expert_mlp"))
+    if mcfg.d_ff_shared:
+        p["shared"] = L.mlp_init(ks[4], d_model, mcfg.d_ff_shared, gated, dtype)
+    return p
+
+
+def _route(router_w: jax.Array, x: jax.Array, mcfg: MoEConfig
+           ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (weights [T,k], expert_idx [T,k], aux_loss scalar)."""
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), router_w)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(probs, mcfg.top_k)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load balance loss: E * sum_e f_e * p_e
+    e = mcfg.num_experts
+    me = jnp.mean(probs, axis=0)                                  # [E]
+    fe = jnp.mean(
+        jnp.sum(jax.nn.one_hot(idx, e, dtype=jnp.float32), axis=1), axis=0)
+    aux = e * jnp.sum(me * fe) * mcfg.load_balance_loss_weight
+    return weights, idx, aux
+
+
+def _expert_ffn(p, h: jax.Array, gated: bool) -> jax.Array:
+    """h: [E, C, D] -> [E, C, D] (batched per-expert dense MLP)."""
+    up = jnp.einsum("ecd,edf->ecf", h, p["wi"])
+    if gated:
+        g = jnp.einsum("ecd,edf->ecf", h, p["wg"])
+        up = jax.nn.silu(g) * up
+    else:
+        up = jax.nn.gelu(up)
+    return jnp.einsum("ecf,efd->ecd", up, p["wo"])
+
+
+def moe_dense(p, x: jax.Array, mcfg: MoEConfig, gated: bool
+              ) -> Tuple[jax.Array, jax.Array]:
+    """Oracle: every expert on every token. x: [B,S,D]."""
+    b, s, d = x.shape
+    xf = x.reshape(b * s, d)
+    weights, idx, aux = _route(p["router"], xf, mcfg)
+    hs = jnp.einsum("td,edf->etf", xf, p["wi"])
+    if gated:
+        gs = jnp.einsum("td,edf->etf", xf, p["wg"])
+        hs = jax.nn.silu(gs) * hs
+    else:
+        hs = jax.nn.gelu(hs)
+    ys = jnp.einsum("etf,efd->etd", hs, p["wo"])                  # [E,T,D]
+    comb = jnp.zeros((xf.shape[0], mcfg.num_experts), x.dtype)
+    comb = comb.at[jnp.arange(xf.shape[0])[:, None], idx].add(
+        weights.astype(x.dtype))
+    out = jnp.einsum("te,etd->td", comb, ys)
+    if mcfg.d_ff_shared:
+        out = out + L.mlp_apply(p["shared"], xf, gated)
+    return out.reshape(b, s, d), aux
+
+
+def _ep_local(p, xf: jax.Array, mcfg: MoEConfig, gated: bool, axis: str,
+              capacity_factor: float) -> Tuple[jax.Array, jax.Array]:
+    """Body run per (data, model) shard inside shard_map.
+    xf: [T_loc, D] local tokens. Experts are sharded over ``axis``."""
+    tp = jax.lax.axis_size(axis)
+    t_loc, d = xf.shape
+    e = mcfg.num_experts
+    e_loc = e // tp
+    k = mcfg.top_k
+    # capacity per (this shard -> each expert)
+    cap = int(np.ceil(t_loc * k / e * capacity_factor))
+    cap = max(4, ((cap + 3) // 4) * 4)
+
+    weights, idx, aux = _route(p["router"], xf, mcfg)              # [T,k]
+    flat_e = idx.reshape(-1)                                       # [T*k]
+    token_of = jnp.repeat(jnp.arange(t_loc), k)
+    order = jnp.argsort(flat_e, stable=True)
+    e_sorted = flat_e[order]
+    tok_sorted = token_of[order]
+    counts = jnp.bincount(flat_e, length=e)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(t_loc * k) - starts[e_sorted]                # slot in expert
+    keep = rank < cap
+    # dispatch buffers [E, cap, D]
+    buf = jnp.zeros((e, cap, d), xf.dtype)
+    buf = buf.at[e_sorted, jnp.where(keep, rank, 0)].add(
+        jnp.where(keep[:, None], xf[tok_sorted], 0))
+    # exchange: [tp, E_loc, cap, D] -> owner gets [tp, E_loc, cap, D]
+    buf = buf.reshape(tp, e_loc, cap, d)
+    buf = jax.lax.all_to_all(buf, axis, split_axis=0, concat_axis=0, tiled=True)
+    buf = buf.reshape(tp, e_loc, cap, d).transpose(1, 0, 2, 3)     # [E_loc,tp,cap,D]
+    h = buf.reshape(e_loc, tp * cap, d)
+    y = _expert_ffn(p, h, gated)                                   # local experts
+    y = y.reshape(e_loc, tp, cap, d).transpose(1, 0, 2, 3)
+    y = y.reshape(tp * e_loc, cap, d)
+    y = jax.lax.all_to_all(y, axis, split_axis=0, concat_axis=0, tiled=True)
+    y = y.reshape(e, cap, d)
+    # combine back to tokens
+    gathered = y[e_sorted, jnp.where(keep, rank, 0)]               # [T*k, D]
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    w_sorted = weights.reshape(-1)[order].astype(xf.dtype)
+    out = jnp.zeros_like(xf)
+    out = out.at[tok_sorted].add(gathered * w_sorted[:, None])
+    return out, aux
+
+
+def moe_ep(p, x: jax.Array, mcfg: MoEConfig, gated: bool, *,
+           axis: str = "model", capacity_factor: float = 1.25,
+           data_axes: Tuple[str, ...] = ("pod", "data"),
+           ) -> Tuple[jax.Array, jax.Array]:
+    """Expert-parallel MoE. x: [B,S,D] sharded over data axes. Must run under
+    an active mesh; falls back to the dense oracle otherwise."""
+    mesh = active_mesh()
+    if mesh is None or axis not in mesh.shape or mesh.shape[axis] == 1 \
+            or mcfg.num_experts % mesh.shape[axis] != 0:
+        return moe_dense(p, x, mcfg, gated)
+    b, s, d = x.shape
+    batch_axes = tuple(a for a in data_axes if a in mesh.shape)
+    tp = mesh.shape[axis]
+    # sequence-parallel dispatch: each model shard routes its own token slice
+    # (no redundant router compute, no replication to verify). Decode (S=1)
+    # falls back to model-replicated tokens.
+    seq_shard = s % tp == 0 and s >= tp
+
+    def body(experts, xloc):
+        bl, sl, dl = xloc.shape
+        out, aux = _ep_local(experts, xloc.reshape(bl * sl, dl), mcfg, gated,
+                             axis, capacity_factor)
+        # aux differs per shard; mean over all axes for a global scalar
+        aux = jax.lax.pmean(aux, axis)
+        if batch_axes:
+            aux = jax.lax.pmean(aux, batch_axes)
+        return out.reshape(bl, sl, dl), aux
+
+    bax = batch_axes if len(batch_axes) != 1 else batch_axes[0]
+    xs = PS(bax if batch_axes else None, axis if seq_shard else None)
+    espec = PS(axis)
+    experts = {k: p[k] for k in ("wi", "wo", "wg") if k in p}
+    experts["router"] = p["router"]
+    especs = {k: espec for k in experts}
+    especs["router"] = PS()
+    out, aux = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(especs, xs),
+        out_specs=(xs, PS()),
+        check_vma=seq_shard,
+    )(experts, x)
+    if mcfg.d_ff_shared:
+        out = out + L.mlp_apply(p["shared"], x, gated)
+    return out, aux

@@ -1,0 +1,131 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Temporal mixing block: two input branches (GeLU gate branch; conv1d + RG-LRU
+branch), merged multiplicatively, projected back. The RG-LRU recurrence
+
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t),
+    a_t = exp(-c * softplus(Lambda) * r_t)
+
+is a linear recurrence in h, evaluated with ``jax.lax.associative_scan``
+(log-depth) for train/prefill and a single-step update for decode. The
+recurrence/input gates use block-diagonal projections (n_blocks heads) as in
+the paper.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import RGLRUConfig
+from repro.models import layers as L
+from repro.models.sharding import constrain
+
+_C = 8.0
+
+
+def rglru_init(key, d_model: int, rcfg: RGLRUConfig, n_blocks: int,
+               dtype=jnp.bfloat16) -> Dict:
+    w = rcfg.lru_width or d_model
+    bd = w // n_blocks
+    ks = jax.random.split(key, 7)
+    # a initialised so that a^c in [0.9, 0.999] over channels
+    lam = jnp.log(jnp.expm1(
+        -jnp.log(jnp.linspace(0.9, 0.999, w, dtype=jnp.float32)) / _C))
+    return {
+        "in_x": L.dense_init(ks[0], d_model, w, ("embed", "lru"), dtype),
+        "in_gate": L.dense_init(ks[1], d_model, w, ("embed", "lru"), dtype),
+        "conv_w": L.Boxed(
+            (jax.random.normal(ks[2], (rcfg.conv_width, w), jnp.float32)
+             / np.sqrt(rcfg.conv_width)).astype(dtype), ("conv", "lru")),
+        "conv_b": L.Boxed(jnp.zeros((w,), dtype), ("lru",)),
+        "w_r": L.Boxed(
+            (jax.random.normal(ks[3], (n_blocks, bd, bd), jnp.float32)
+             / np.sqrt(bd)).astype(dtype), (None, "lru", None)),
+        "b_r": L.Boxed(jnp.zeros((w,), jnp.float32), ("lru",)),
+        "w_i": L.Boxed(
+            (jax.random.normal(ks[4], (n_blocks, bd, bd), jnp.float32)
+             / np.sqrt(bd)).astype(dtype), (None, "lru", None)),
+        "b_i": L.Boxed(jnp.zeros((w,), jnp.float32), ("lru",)),
+        "lam": L.Boxed(lam, ("lru",)),
+        "out": L.dense_init(ks[5], w, d_model, ("lru", "embed"), dtype),
+    }
+
+
+def _block_diag(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: [B,S,W]; w: [H, W/H, W/H] block-diagonal projection."""
+    b, s, width = x.shape
+    h, bd, _ = w.shape
+    xr = x.reshape(b, s, h, bd)
+    return jnp.einsum("bshi,hij->bshj", xr, w).reshape(b, s, width)
+
+
+def _gates(params, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Returns (log_a [B,S,W] fp32, gated_input [B,S,W] fp32)."""
+    r = jax.nn.sigmoid(_block_diag(x, params["w_r"]).astype(jnp.float32)
+                       + params["b_r"])
+    i = jax.nn.sigmoid(_block_diag(x, params["w_i"]).astype(jnp.float32)
+                       + params["b_i"])
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r          # <= 0
+    gated = i * x.astype(jnp.float32)
+    return log_a, gated
+
+
+def rglru_layer(params, u: jax.Array, *, rcfg: RGLRUConfig, mode: str,
+                cache: Optional[Dict[str, jax.Array]] = None
+                ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """u: [B,S,D]. cache: {"conv": [B,W-1,lru], "state": [B,lru] fp32}."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", u, params["in_gate"]))
+    x = jnp.einsum("bsd,dw->bsw", u, params["in_x"])
+    x = constrain(x, "act_batch", "act_seq", "act_mlp")
+
+    # causal depthwise conv
+    width = params["conv_w"].shape[0]
+    conv_state = cache["conv"] if cache is not None else None
+    if conv_state is None:
+        conv_state = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([conv_state, x], axis=1)
+    x = sum(xp[:, i:i + x.shape[1]] * params["conv_w"][i]
+            for i in range(width)) + params["conv_b"]
+    new_conv = xp[:, xp.shape[1] - (width - 1):]
+
+    log_a, gated = _gates(params, x)
+    a = jnp.exp(log_a)
+    b_term = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+
+    if mode in ("train", "prefill"):
+        h0 = cache["state"].astype(jnp.float32) if cache is not None else None
+
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+
+        if h0 is not None:
+            b_term = b_term.at[:, 0].add(a[:, 0] * h0)
+        ah, h = jax.lax.associative_scan(combine, (a, b_term), axis=1)
+        new_cache = {"conv": new_conv, "state": h[:, -1]} \
+            if mode == "prefill" else None
+    elif mode == "decode":
+        assert cache is not None
+        h_prev = cache["state"].astype(jnp.float32)               # [B,W]
+        h = a[:, 0] * h_prev + b_term[:, 0]
+        h = h[:, None]
+        new_cache = {"conv": new_conv, "state": h[:, -1]}
+    else:
+        raise ValueError(mode)
+
+    y = h.astype(u.dtype) * gate
+    out = jnp.einsum("bsw,wd->bsd", y, params["out"])
+    return constrain(out, "act_batch", "act_seq", "act_embed"), new_cache
+
+
+def init_rglru_cache(batch: int, d_model: int, rcfg: RGLRUConfig,
+                     dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    w = rcfg.lru_width or d_model
+    return {
+        "conv": jnp.zeros((batch, rcfg.conv_width - 1, w), dtype),
+        "state": jnp.zeros((batch, w), jnp.float32),
+    }

@@ -1,0 +1,189 @@
+"""Mamba-2 SSD (state-space duality) block.
+
+Training/prefill uses the chunked SSD algorithm (intra-chunk quadratic form +
+inter-chunk linear recurrence); decode uses the O(1) recurrent state update.
+A Pallas kernel for the intra-chunk quadratic form lives in
+``repro.kernels.ssd``; this module is the pure-JAX implementation (and the
+kernel's oracle).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SSMConfig
+from repro.models import layers as L
+from repro.models.sharding import constrain
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x: [..., q] -> [..., q, q] lower-triangular inclusive segment sums:
+    out[..., i, j] = sum_{k=j+1..i} x[..., k] (NEG_INF above diagonal)."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_init(key, d_model: int, scfg: SSMConfig, dtype=jnp.bfloat16) -> Dict:
+    di = scfg.expand * d_model
+    nh = di // scfg.headdim
+    gn = scfg.ngroups * scfg.d_state
+    ks = jax.random.split(key, 5)
+    conv_ch = di + 2 * gn
+    return {
+        # fused input projection: [z, x, B, C, dt]
+        "in_proj": L.dense_init(ks[0], d_model, 2 * di + 2 * gn + nh,
+                                ("embed", "ssm_inner"), dtype),
+        "conv_w": L.Boxed(
+            (jax.random.normal(ks[1], (scfg.conv_width, conv_ch), jnp.float32)
+             / np.sqrt(scfg.conv_width)).astype(dtype), ("conv", "ssm_inner")),
+        "conv_b": L.Boxed(jnp.zeros((conv_ch,), dtype), ("ssm_inner",)),
+        "A_log": L.Boxed(
+            jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)), (None,)),
+        "D": L.Boxed(jnp.ones((nh,), jnp.float32), (None,)),
+        "dt_bias": L.Boxed(
+            jnp.log(jnp.expm1(jnp.full((nh,), 0.01, jnp.float32))), (None,)),
+        "norm": L.scale_init(di, ("ssm_inner",)),
+        "out_proj": L.dense_init(ks[2], di, d_model, ("ssm_inner", "embed"), dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv. x: [B,S,C]; w: [W,C]. Returns (y, new_state)
+    where state is the last W-1 inputs [B,W-1,C]."""
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(width)) + b
+    new_state = xp[:, xp.shape[1] - (width - 1):]
+    return jax.nn.silu(y), new_state
+
+
+def _ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                 C: jax.Array, chunk: int,
+                 init_state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """SSD scan. x: [b,s,h,p]; dt: [b,s,h]; A: [h]; B,C: [b,s,g,n] with g
+    broadcastable to h. Returns (y [b,s,h,p], final_state [b,h,p,n])."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        # dt=0 on padding → decay 1, zero input: state passes through unchanged
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    s_orig, s = s, s + pad
+    c = s // q
+    rep = h // g
+
+    xr = x.reshape(b, c, q, h, p)
+    dtr = dt.reshape(b, c, q, h)
+    Br = jnp.repeat(B.reshape(b, c, q, g, n), rep, axis=3)
+    Cr = jnp.repeat(C.reshape(b, c, q, g, n), rep, axis=3)
+
+    dA = dtr * A[None, None, None, :]                   # [b,c,q,h] (negative)
+    dA_cs = jnp.cumsum(dA, axis=2)                      # [b,c,q,h]
+    # intra-chunk (diagonal blocks)
+    Lmat = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))   # [b,c,h,q,q]
+    xdt = xr * dtr[..., None]
+    scores = jnp.einsum("bclhn,bcshn->bchls", Cr, Br) * Lmat
+    y_diag = jnp.einsum("bchls,bcshp->bclhp", scores, xdt)
+    # chunk states
+    decay_states = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)  # [b,c,q,h]
+    states = jnp.einsum("bcshn,bcsh,bcshp->bchpn", Br, decay_states, xdt)
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])            # [b,c,h]
+    s0 = init_state if init_state is not None else \
+        jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(carry, inp):
+        st, dc = inp
+        new = carry * dc[:, :, None, None] + st
+        return new, carry                                # emit state *before* chunk
+
+    final, prev_states = jax.lax.scan(
+        step, s0.astype(jnp.float32),
+        (states.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+         chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)   # [b,c,h,p,n]
+    state_decay = jnp.exp(dA_cs)                          # [b,c,q,h]
+    y_off = jnp.einsum("bclhn,bchpn,bclh->bclhp", Cr,
+                       prev_states.astype(Cr.dtype), state_decay)
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y[:, :s_orig], final
+
+
+def ssd_layer(params, u: jax.Array, *, scfg: SSMConfig, mode: str,
+              cache: Optional[Dict[str, jax.Array]] = None
+              ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Full Mamba-2 block. u: [B,S,D]. mode: train|prefill|decode.
+    cache: {"conv": [B,W-1,C], "state": [B,H,P,N]} for decode."""
+    b, s, d = u.shape
+    di = scfg.expand * d
+    nh = di // scfg.headdim
+    gn = scfg.ngroups * scfg.d_state
+
+    proj = jnp.einsum("bsd,dk->bsk", u, params["in_proj"])
+    z, xbc, dt_raw = jnp.split(proj, [di, di + di + 2 * gn], axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                 conv_state)
+    x, B, C = jnp.split(xbc, [di, di + gn], axis=-1)
+    x = x.reshape(b, s, nh, scfg.headdim)
+    B = B.reshape(b, s, scfg.ngroups, scfg.d_state).astype(jnp.float32)
+    C = C.reshape(b, s, scfg.ngroups, scfg.d_state).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])       # [b,s,h]
+    A = -jnp.exp(params["A_log"])                                  # [h]
+
+    if mode in ("train", "prefill"):
+        y, final_state = _ssd_chunked(x.astype(jnp.float32), dt, A, B, C,
+                                      scfg.chunk_size)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"conv": new_conv, "state": final_state}
+    elif mode == "decode":
+        assert cache is not None
+        st = cache["state"].astype(jnp.float32)                    # [b,h,p,n]
+        rep = nh // scfg.ngroups
+        B1 = jnp.repeat(B[:, 0], rep, axis=1)                      # [b,h,n]
+        C1 = jnp.repeat(C[:, 0], rep, axis=1)
+        dt1 = dt[:, 0]                                             # [b,h]
+        dA = jnp.exp(dt1 * A[None, :])                             # [b,h]
+        x1 = x[:, 0].astype(jnp.float32)                           # [b,h,p]
+        st = st * dA[:, :, None, None] + jnp.einsum(
+            "bhp,bhn,bh->bhpn", x1, B1, dt1)
+        y = jnp.einsum("bhpn,bhn->bhp", st, C1)[:, None]           # [b,1,h,p]
+        new_cache = {"conv": new_conv, "state": st}
+        x = x1[:, None]
+    else:
+        raise ValueError(mode)
+
+    y = y + params["D"][None, None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(b, s, di).astype(u.dtype)
+    y = y * jax.nn.silu(z)
+    y = L.rms_norm(y, params["norm"])
+    out = jnp.einsum("bsk,kd->bsd", y, params["out_proj"])
+    return constrain(out, "act_batch", "act_seq", "act_embed"), new_cache
+
+
+def init_ssd_cache(batch: int, d_model: int, scfg: SSMConfig,
+                   dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    di = scfg.expand * d_model
+    nh = di // scfg.headdim
+    gn = scfg.ngroups * scfg.d_state
+    return {
+        "conv": jnp.zeros((batch, scfg.conv_width - 1, di + 2 * gn), dtype),
+        "state": jnp.zeros((batch, nh, scfg.headdim, scfg.d_state), jnp.float32),
+    }

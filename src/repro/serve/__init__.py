@@ -1,0 +1,2 @@
+from repro.serve.serve_step import (abstract_cache, abstract_params,  # noqa: F401
+                                    make_decode_step, make_prefill_step)

@@ -1,0 +1,52 @@
+"""Serving steps: batched prefill and single-token decode.
+
+``decode_step`` is the unit lowered for the ``decode_*`` / ``long_*`` dry-run
+cells: one new token per request against a KV cache of the cell's seq_len.
+Sampling is greedy (argmax) — the engine layer adds temperature sampling.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model_zoo import Model
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch: Dict[str, jax.Array], cache):
+        """Returns (next_token [B,1], cache after prefill, last hidden)."""
+        x, new_cache, _ = model.apply(params, batch, mode="prefill",
+                                      cache=cache)
+        last = x[:, -1:]
+        logits = model.unembed(params, last)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, new_cache
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, cache, tokens: jax.Array, lengths: jax.Array):
+        """tokens: [B,1] current token; lengths: [B] tokens so far.
+        Returns (next_token [B,1], new_cache)."""
+        batch = {"tokens": tokens, "lengths": lengths}
+        x, new_cache, _ = model.apply(params, batch, mode="decode",
+                                      cache=cache)
+        logits = model.unembed(params, x)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, new_cache
+    return decode_step
+
+
+def abstract_params(model: Model):
+    def go():
+        from repro.models.layers import unbox
+        params, _ = unbox(model.init(jax.random.PRNGKey(0)))
+        return params
+    return jax.eval_shape(go)
+
+
+def abstract_cache(model: Model, batch: int, cache_len: int):
+    return jax.eval_shape(lambda: model.init_cache(batch, cache_len))

@@ -1,0 +1,4 @@
+from repro.train.optimizer import (AdamWConfig, AdamWState, TrainState,  # noqa: F401
+                                   adamw_update, init_opt_state, lr_schedule)
+from repro.train.train_step import (TrainConfig, abstract_train_state,  # noqa: F401
+                                    init_train_state, make_train_step)

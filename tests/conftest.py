@@ -1,0 +1,9 @@
+import os
+
+# Tests must see exactly ONE device (the dry-run sets 512 in its own
+# process); keep any user XLA_FLAGS out of the test environment.
+os.environ.pop("XLA_FLAGS", None)
+
+import jax  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")
