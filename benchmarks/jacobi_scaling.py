@@ -84,6 +84,30 @@ def run_overdecomposition(domain=(32, 32, 32), iters=4) -> List[Dict]:
     return rows
 
 
+def run_transfer_engine(domain=(32, 32, 32), iters=4, od=4) -> List[Dict]:
+    """Transfer-engine ablation on the tasked Jacobi pipeline: the paper's
+    §4.1.3 overlap (argument prefetch) and §3.2.3 direct D2D path, on vs
+    off, on the over-decomposed PREMA schedule."""
+    from repro.core import Runtime, RuntimeConfig
+    from repro.apps.jacobi3d import run_tasked
+    rng = np.random.default_rng(0)
+    u0 = rng.random(domain).astype(np.float32)
+    rows = []
+    for label, kw in (("off", dict(d2d=False, prefetch=False)),
+                      ("prefetch", dict(d2d=False, prefetch=True)),
+                      ("prefetch_d2d", dict(d2d=True, prefetch=True))):
+        with Runtime(RuntimeConfig(memory_capacity=1 << 30, **kw)) as rt:
+            run_tasked(u0, 1, rt, over_decomposition=od)   # warm compile
+            t0 = time.perf_counter()
+            run_tasked(u0, iters, rt, over_decomposition=od)
+            dt = (time.perf_counter() - t0) / iters
+            stats = rt.stats()
+        rows.append({"cfg": label, "ms_per_iter": dt * 1e3,
+                     "prefetch_hits": stats["prefetch_hits"],
+                     "transfers_d2d": stats["transfers_d2d"]})
+    return rows
+
+
 def main():
     print("name,us_per_call,derived")
     for r in run_scaling():
@@ -93,6 +117,9 @@ def main():
               f"{r['overlap_ms'] * 1e3:.0f},gain_x{r['overlap_gain']:.2f}")
     for r in run_overdecomposition():
         print(f"fig15_od{r['od']},{r['ms_per_iter'] * 1e3:.0f},")
+    for r in run_transfer_engine():
+        print(f"xfer_{r['cfg']},{r['ms_per_iter'] * 1e3:.0f},"
+              f"pf{r['prefetch_hits']}_d2d{r['transfers_d2d']}")
 
 
 if __name__ == "__main__":

@@ -5,16 +5,20 @@ incrementally, normalized against a direct jit call (the "CUDA baseline"
 analogue — no runtime, hand-managed buffers). Reports throughput
 (iterations/s) per matrix size and the ratio to the baseline.
 
-Ladder (paper §4.1):
+Ladder (paper §4.1 + transfer engine):
   TF-Baseline    fresh jit per launch, sync dispatch, no pools
   TF-PageLocked  + staging-buffer pool (page-locked analogue)
   TF-CustomAlloc + jit cache & buffer donation (custom allocator analogue)
   TF-TPools      + request/future pools
-  TF-TferQueue   + dedicated transfer thread
+  TF-TferQueue   + per-device dedicated transfer queues
   TF-MultQueue   + multiple in-flight launches (multi-stream analogue)
+  TF-Prefetch    + argument prefetch pipeline (transfers overlap compute)
+  TF-D2D         + direct device→device transfers (no host bounce)
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 from typing import Dict, List
 
@@ -22,33 +26,48 @@ import numpy as np
 
 from repro.core import Runtime, RuntimeConfig
 
+# every rung below TF-Prefetch runs with the transfer engine's new paths
+# off, so the ladder isolates each optimization's contribution
+_OFF = dict(d2d=False, prefetch=False)
+
 LADDER = [
     ("TF-Baseline", dict(staging_pool=False, cache_jit=False,
                          request_pool=False, transfer_thread=False,
-                         inflight=1, sync_dispatch=True)),
+                         inflight=1, sync_dispatch=True, **_OFF)),
     ("TF-PageLocked", dict(staging_pool=True, cache_jit=False,
                            request_pool=False, transfer_thread=False,
-                           inflight=1, sync_dispatch=True)),
+                           inflight=1, sync_dispatch=True, **_OFF)),
     ("TF-CustomAlloc", dict(staging_pool=True, cache_jit=True,
                             request_pool=False, transfer_thread=False,
-                            inflight=1, sync_dispatch=True)),
+                            inflight=1, sync_dispatch=True, **_OFF)),
     ("TF-TPools", dict(staging_pool=True, cache_jit=True, request_pool=True,
                        transfer_thread=False, inflight=1,
-                       sync_dispatch=True)),
+                       sync_dispatch=True, **_OFF)),
     ("TF-TferQueue", dict(staging_pool=True, cache_jit=True,
                           request_pool=True, transfer_thread=True,
-                          inflight=1, sync_dispatch=True)),
+                          inflight=1, sync_dispatch=True, **_OFF)),
     ("TF-MultQueue", dict(staging_pool=True, cache_jit=True,
                           request_pool=True, transfer_thread=True,
-                          inflight=4, sync_dispatch=False)),
+                          inflight=4, sync_dispatch=False, **_OFF)),
+    ("TF-Prefetch", dict(staging_pool=True, cache_jit=True,
+                         request_pool=True, transfer_thread=True,
+                         inflight=4, sync_dispatch=False,
+                         d2d=False, prefetch=True)),
+    ("TF-D2D", dict(staging_pool=True, cache_jit=True,
+                    request_pool=True, transfer_thread=True,
+                    inflight=4, sync_dispatch=False,
+                    d2d=True, prefetch=True)),
 ]
+
+LADDER_BY_NAME = dict(LADDER)
 
 
 def dgemm(a, b, c):
     return (a @ b).astype(c.dtype)
 
 
-def bench_config(name: str, overrides: Dict, n: int, iters: int) -> float:
+def bench_config(name: str, overrides: Dict, n: int, iters: int,
+                 collect_stats: Dict = None) -> float:
     """Each iteration re-creates inputs (allocate, transfer, compute) like the
     paper's benchmark. Returns iterations/s."""
     import jax
@@ -69,6 +88,8 @@ def bench_config(name: str, overrides: Dict, n: int, iters: int) -> float:
             rt.run(dgemm, [(A, "r"), (B, "r"), (C, "w")])
         rt.barrier(timeout=600)
         dt = time.perf_counter() - t0
+        if collect_stats is not None:
+            collect_stats.update(rt.stats())
     return iters / dt
 
 
@@ -90,27 +111,49 @@ def bench_direct(n: int, iters: int) -> float:
     return iters / (time.perf_counter() - t0)
 
 
-def run(sizes=(64, 128, 256, 512), iters=60) -> List[Dict]:
+def run(sizes=(64, 128, 256, 512), iters=60, only=None) -> List[Dict]:
+    ladder = [(k, v) for k, v in LADDER if only is None or k == only]
     rows = []
     for n in sizes:
         base = bench_direct(n, iters)
         row = {"size": n, "direct_its": round(base, 1)}
-        for name, overrides in LADDER:
-            its = bench_config(name, overrides, n, iters)
+        for name, overrides in ladder:
+            stats: Dict = {}
+            its = bench_config(name, overrides, n, iters,
+                              collect_stats=stats)
             row[name] = round(its, 1)
             row[name + "_vs_direct"] = round(its / base, 3)
+            if overrides.get("prefetch"):
+                row[name + "_prefetch_hits"] = stats.get("prefetch_hits", 0)
+            if overrides.get("d2d"):
+                row[name + "_transfers_d2d"] = stats.get("transfers_d2d", 0)
         rows.append(row)
     return rows
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=[k for k, _ in LADDER],
+                    help="run a single ladder rung (used by the sweep)")
+    ap.add_argument("--sizes", default="64,128,256,512")
+    ap.add_argument("--iters", type=int, default=60)
+    ap.add_argument("--json", default=None,
+                    help="also write rows as JSON to this path")
+    args = ap.parse_args(argv)
+    sizes = tuple(int(s) for s in args.sizes.split(","))
+    rows = run(sizes=sizes, iters=args.iters, only=args.only)
     print("name,us_per_call,derived")
-    for row in run():
+    for row in rows:
         n = row["size"]
         for name, _ in LADDER:
+            if name not in row:
+                continue
             us = 1e6 / row[name]
             print(f"fig8_{name}_{n},{us:.1f},x{row[name + '_vs_direct']:.3f}")
         print(f"fig8_direct_{n},{1e6 / row['direct_its']:.1f},x1.000")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=2)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,36 @@
+"""repro — reproduction of "Runtime Support for Performance Portability on
+Heterogeneous Distributed Platforms" on the JAX/XLA stack.
+
+Compatibility: call sites use the modern ``jax.shard_map`` spelling; on the
+older jax in this container it only exists under ``jax.experimental`` with
+the same signature, so alias it once here (this package root is imported
+before any ``repro.*`` submodule).
+"""
+import jax
+
+#: True when this jax predates the native ``jax.shard_map`` API and the
+#: aliases below are in effect. The compat layer cannot emulate the new
+#: partial-manual semantics (inner sharding constraints naming manual
+#: axes); tests depending on those skip when this is set.
+COMPAT_SHARD_MAP = not hasattr(jax, "shard_map")
+
+if not hasattr(jax, "shard_map"):
+    from jax.experimental.shard_map import shard_map as _experimental_sm
+
+    def _shard_map(f, *args, **kwargs):
+        if "check_vma" in kwargs:        # new-API name for check_rep
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        if "axis_names" in kwargs:       # new API: axes to shard manually;
+            manual = set(kwargs.pop("axis_names"))   # old API wants the
+            mesh = kwargs.get("mesh", args[0] if args else None)  # converse
+            kwargs["auto"] = frozenset(
+                n for n in mesh.axis_names if n not in manual)
+        return _experimental_sm(f, *args, **kwargs)
+
+    jax.shard_map = _shard_map
+
+if not hasattr(jax.lax, "axis_size"):
+    def _axis_size(axis_name):
+        frame = jax.core.axis_frame(axis_name)
+        return getattr(frame, "size", frame)   # older jax returns the int
+    jax.lax.axis_size = _axis_size

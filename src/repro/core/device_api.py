@@ -5,6 +5,12 @@ the Core Runtime never touches a backend directly. The JAX implementation
 covers every XLA backend uniformly (CPU/GPU/TPU) — JAX plays the role the
 paper's OpenCL-dialect kernel macro played: one kernel definition, every
 backend. Hardware adaptation notes in DESIGN.md §2.
+
+Transfer engine primitives (paper §3.2.3/§4.1.3): besides the synchronous
+``upload``/``download`` pair, devices expose asynchronous variants returning
+``TransferHandle``s, plus a direct device→device ``transfer`` that never
+bounces through host memory — the GPU-aware-interconnect analogue. The Core
+Runtime's per-device transfer queues are built on these primitives.
 """
 from __future__ import annotations
 
@@ -27,6 +33,28 @@ class DeviceInfo:
     name: str = ""
 
 
+class TransferHandle:
+    """Handle on an (a)synchronous copy. ``result()`` blocks until the data
+    is resident; ``is_ready()`` polls without blocking (the PREMA
+    requirement: status queries must never stall the time-slicing loop)."""
+
+    __slots__ = ("_value", "_ready_fn")
+
+    def __init__(self, value: Any, ready_fn: Optional[Callable[[], bool]]
+                 = None):
+        self._value = value
+        self._ready_fn = ready_fn
+
+    def is_ready(self) -> bool:
+        return self._ready_fn() if self._ready_fn is not None else True
+
+    def result(self) -> Any:
+        v = self._value
+        if hasattr(v, "block_until_ready"):
+            v.block_until_ready()
+        return v
+
+
 class Device(abc.ABC):
     """Abstract device: (a)synchronous task launch + data management."""
 
@@ -40,6 +68,24 @@ class Device(abc.ABC):
     def download(self, dev_array: Any) -> np.ndarray: ...
 
     @abc.abstractmethod
+    def transfer_from(self, src: Optional["Device"], dev_array: Any) -> Any:
+        """Copy ``dev_array`` (resident on ``src``, which may be None when
+        the source device is foreign) onto this device without staging
+        through host memory (paper Fig. 7: device-aware path)."""
+
+    def upload_async(self, host_array: np.ndarray) -> TransferHandle:
+        return TransferHandle(self.upload(host_array))
+
+    def download_async(self, dev_array: Any) -> TransferHandle:
+        return TransferHandle(self.download(dev_array))
+
+    def clone(self, dev_array: Any) -> Any:
+        """Private on-device copy of a resident array (no host bounce).
+        Used to snapshot data that must survive buffer donation of the
+        original. Backends without donation may return the array itself."""
+        return dev_array
+
+    @abc.abstractmethod
     def launch(self, kernel: Callable, args: Tuple[Any, ...],
                donate: Tuple[int, ...] = ()) -> Any: ...
 
@@ -48,6 +94,18 @@ class Device(abc.ABC):
 
     @abc.abstractmethod
     def is_ready(self, handle: Any) -> bool: ...
+
+
+def transfer(src_dev: Optional[Device], dst_dev: Device,
+             dev_array: Any) -> Any:
+    """Direct D2D copy: move ``dev_array`` from ``src_dev`` to ``dst_dev``
+    with no host bounce. The single entry point every layer above (core
+    runtime coherence walk, distributed DIRECT payload path) routes through.
+    ``src_dev`` may be None when the source device is not wrapped locally
+    (e.g. a payload arriving from another rank's runtime)."""
+    if src_dev is not None and src_dev.info.device_id == dst_dev.info.device_id:
+        return dev_array
+    return dst_dev.transfer_from(src_dev, dev_array)
 
 
 class JaxDevice(Device):
@@ -65,19 +123,46 @@ class JaxDevice(Device):
         super().__init__(info)
         self.jax_device = jax_device
         self.cache_jit = cache_jit
-        self._jit_cache: Dict[Tuple[int, Tuple[int, ...]], Callable] = {}
+        # Keyed on the kernel OBJECT (strong ref), never id(kernel): an id
+        # can be recycled after the kernel is garbage-collected, silently
+        # launching a stale compiled function for a new kernel.
+        self._jit_cache: Dict[Tuple[Callable, Tuple[int, ...]], Callable] = {}
         self._lock = threading.Lock()
 
     def upload(self, host_array: np.ndarray) -> Any:
-        return jax.device_put(host_array, self.jax_device)
+        arr = jax.device_put(host_array, self.jax_device)
+        # CPU backends may ZERO-COPY device_put (the device buffer aliases
+        # the numpy one). The runtime recycles host staging buffers, so
+        # upload must guarantee an independent device copy: re-put a private
+        # host copy (only the jax array references it → aliasing is safe).
+        if (self.info.device_type == "cpu"
+                and np.may_share_memory(np.asarray(arr), host_array)):
+            arr = jax.device_put(host_array.copy(), self.jax_device)
+        return arr
 
     def download(self, dev_array: Any) -> np.ndarray:
         return np.asarray(dev_array)
 
+    def transfer_from(self, src: "Device", dev_array: Any) -> Any:
+        # jax.device_put on a committed jax.Array issues the copy directly
+        # between the two buffers (ICI/NVLink/PCIe, backend permitting) —
+        # no intermediate np.ndarray is ever materialized.
+        return jax.device_put(dev_array, self.jax_device)
+
+    def clone(self, dev_array: Any) -> Any:
+        import jax.numpy as jnp
+        with jax.default_device(self.jax_device):
+            return jnp.array(dev_array, copy=True)
+
+    def upload_async(self, host_array: np.ndarray) -> TransferHandle:
+        arr = self.upload(host_array)
+        ready = arr.is_ready if hasattr(arr, "is_ready") else None
+        return TransferHandle(arr, ready)
+
     def _get_jit(self, kernel: Callable, donate: Tuple[int, ...]) -> Callable:
         if not self.cache_jit:
             return jax.jit(kernel, donate_argnums=donate)
-        key = (id(kernel), donate)
+        key = (kernel, donate)
         with self._lock:
             fn = self._jit_cache.get(key)
             if fn is None:
@@ -103,15 +188,46 @@ class JaxDevice(Device):
             return True
 
 
+def _host_memory_bytes() -> Optional[int]:
+    try:
+        with open("/proc/meminfo") as f:
+            for line in f:
+                if line.startswith("MemTotal:"):
+                    return int(line.split()[1]) * 1024
+    except OSError:
+        pass
+    return None
+
+
+def device_capacity(jax_device: jax.Device, n_devices: int,
+                    fraction: float = 0.75) -> int:
+    """Honest per-device capacity: ask the backend for its byte limit
+    (GPU/TPU expose one via memory_stats); CPU devices split the host's
+    physical memory. Falls back to the 16 GiB v5e-like default."""
+    try:
+        stats = jax_device.memory_stats()
+        if stats:
+            limit = stats.get("bytes_limit") or stats.get("bytes_reservable_limit")
+            if limit:
+                return int(limit * fraction)
+    except Exception:
+        pass
+    host = _host_memory_bytes()
+    if host is not None and n_devices > 0:
+        return int(host * fraction / n_devices)
+    return int(16 * (1 << 30) * fraction)
+
+
 def discover_devices(memory_capacity: Optional[int] = None,
                      cache_jit: bool = True) -> List[JaxDevice]:
     """One runtime Device per jax.Device. ``memory_capacity`` caps the bytes
-    the runtime's memory monitor allows per device (None → 3/4 of 16 GiB —
-    the v5e-like default used in tests via small overrides)."""
-    cap = memory_capacity if memory_capacity is not None \
-        else int(16 * (1 << 30) * 0.75)
+    the runtime's memory monitor allows per device (None → honest per-device
+    capacity reported by the backend, see ``device_capacity``)."""
+    all_devs = jax.devices()
     devs = []
-    for i, d in enumerate(jax.devices()):
+    for i, d in enumerate(all_devs):
+        cap = memory_capacity if memory_capacity is not None \
+            else device_capacity(d, len(all_devs))
         devs.append(JaxDevice(
             DeviceInfo(device_id=i, device_type=d.platform,
                        memory_capacity=cap, name=str(d)), d,

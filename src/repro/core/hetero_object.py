@@ -42,6 +42,10 @@ class HeteroObject:
         self.readers: Set[Any] = set()
         # host pin: while > 0, writer tasks must wait (request_host/release)
         self.host_pins = 0
+        # device-view pin: while > 0, launches must not DONATE this object's
+        # buffers (a snapshot — e.g. a distributed DIRECT send — still
+        # references them; donation would delete the array under the NIC)
+        self.device_pins = 0
         self._pin_waiters: list = []
         if value is not None:
             value = np.asarray(value)

@@ -1,7 +1,21 @@
-"""Modular scheduler (paper §3.1.4): an abstract class with exactly two
-operations — push(task) adds a runnable task; pop(device_hint) returns the
-next (task, device_id) pair. Policies are pluggable; the runtime never
-assumes more than push/pop.
+"""Modular scheduler (paper §3.1.4): an abstract class with push/pop as the
+only operations the runtime requires; policies are pluggable.
+
+Indexed ready queues: every built-in policy now routes through
+``IndexedScheduler`` — tasks are placed into a per-device deque at ``push``
+time (the policy decides the placement), with a shared overflow deque for
+tasks that have no placement preference. ``pop(device_hint)`` is O(1) in
+the common case: pop the head of the hint's own deque, else the head of the
+overflow deque. The old implementations re-scanned the whole global queue
+under one lock on every pop — O(queue length) per worker wake-up, which
+serialized the dedicated per-device threads (paper §4.1.6) behind the scan.
+
+Two extra hooks support the runtime's argument-prefetch pipeline
+(paper §4.1.3 — overlap transfers with compute):
+  peek(device_hint)   — the next task this device would receive (no removal)
+  assign(device_hint) — pop + commit in one step; the prefetcher uses this
+                        to claim the next task early and enqueue its
+                        argument transfers while the current task computes.
 """
 from __future__ import annotations
 
@@ -29,6 +43,19 @@ class Scheduler(abc.ABC):
     def pop(self, device_hint: Optional[int] = None
             ) -> Optional[Tuple[HeteroTask, int]]: ...
 
+    def peek(self, device_hint: Optional[int] = None
+             ) -> Optional[HeteroTask]:
+        """Next task ``pop(device_hint)`` would return, without removing it.
+        Policies may return None when peeking is unsupported."""
+        return None
+
+    def assign(self, device_hint: Optional[int] = None
+               ) -> Optional[Tuple[HeteroTask, int]]:
+        """Claim the next (task, device) pair — identical to ``pop`` but
+        named for the prefetch pipeline, which commits the assignment before
+        the worker is ready to launch."""
+        return self.pop(device_hint)
+
     def __len__(self) -> int:  # pragma: no cover - informational
         return 0
 
@@ -40,125 +67,175 @@ class Scheduler(abc.ABC):
                 if t == task.device_type]
 
 
-class FifoScheduler(Scheduler):
-    """Single global FIFO; device = hint if eligible, else least-loaded."""
+class IndexedScheduler(Scheduler):
+    """Per-device indexed ready queues + shared overflow deque.
 
-    def __init__(self, device_types):
+    Subclasses implement ``_place(task) -> Optional[device_id]`` (None →
+    overflow) and ``_choose(task) -> device_id`` (device selection for
+    overflow tasks popped without a hint). ``steals`` controls whether an
+    idle device may take the oldest task indexed to another device — on for
+    throughput policies, off for locality (stealing would defeat it).
+    """
+
+    steals = True
+
+    def __init__(self, device_types: Dict[int, str]):
         super().__init__(device_types)
-        self._q: Deque[HeteroTask] = collections.deque()
+        self._ready: Dict[int, Deque[HeteroTask]] = {
+            d: collections.deque() for d in device_types}
+        self._overflow: Deque[HeteroTask] = collections.deque()
+        # tasks indexed per device but not yet popped; policies add it to
+        # ``load`` so placement sees queued work, not only running work
+        self.queued: Dict[int, int] = {d: 0 for d in device_types}
 
-    def push(self, task):
-        with self._lock:
-            self._q.append(task)
-
-    def pop(self, device_hint=None):
-        with self._lock:
-            for i, task in enumerate(self._q):
-                elig = self.eligible(task)
-                if not elig:
-                    continue
-                if device_hint is not None and device_hint in elig:
-                    dev = device_hint
-                elif device_hint is not None:
-                    continue   # let the right device's worker take it
-                else:
-                    dev = min(elig, key=lambda d: self.load[d])
-                del self._q[i]
-                return task, dev
+    # policy hooks ----------------------------------------------------------
+    def _place(self, task: HeteroTask) -> Optional[int]:
         return None
 
-    def __len__(self):
-        return len(self._q)
+    def _choose(self, task: HeteroTask) -> int:
+        elig = self.eligible(task) or list(self.device_types)
+        return min(elig, key=lambda d: self.load[d] + self.queued[d])
 
+    def _pressure(self, dev: int) -> int:
+        return self.load[dev] + self.queued[dev]
 
-class LeastLoadedScheduler(FifoScheduler):
-    """FIFO order, but always place on the least-loaded eligible device —
-    the multi-GPU load-balancing policy behind the paper's Fig. 9."""
-
-    def pop(self, device_hint=None):
+    # queue mechanics -------------------------------------------------------
+    def push(self, task: HeteroTask) -> None:
         with self._lock:
-            if not self._q:
-                return None
+            dev = self._place(task)
+            if dev is None:
+                self._overflow.append(task)
+            else:
+                self._ready[dev].append(task)
+                self.queued[dev] += 1
+
+    def _take_overflow(self, device_hint: int) -> Optional[HeteroTask]:
+        # O(1) when the head is eligible (the common, untyped-task case);
+        # the scan only happens while type-restricted tasks sit at the head
+        for i, task in enumerate(self._overflow):
+            if device_hint in self.eligible(task):
+                del self._overflow[i]
+                return task
+        return None
+
+    def _steal(self, device_hint: int) -> Optional[HeteroTask]:
+        victim = max((d for d in self._ready if d != device_hint),
+                     key=lambda d: len(self._ready[d]), default=None)
+        if victim is None or not self._ready[victim]:
+            return None
+        # steal the oldest so the victim keeps its freshest placements
+        task = self._ready[victim][0]
+        if device_hint not in self.eligible(task):
+            return None
+        self._ready[victim].popleft()
+        self.queued[victim] -= 1
+        return task
+
+    def pop(self, device_hint: Optional[int] = None
+            ) -> Optional[Tuple[HeteroTask, int]]:
+        with self._lock:
             if device_hint is not None:
-                # only take work if we're (one of) the least loaded
-                for i, task in enumerate(self._q):
-                    elig = self.eligible(task)
-                    if device_hint not in elig:
-                        continue
-                    best = min(self.load[d] for d in elig)
-                    if self.load[device_hint] <= best:
-                        del self._q[i]
+                q = self._ready[device_hint]
+                if q:
+                    self.queued[device_hint] -= 1
+                    return q.popleft(), device_hint
+                task = self._take_overflow(device_hint)
+                if task is not None:
+                    return task, device_hint
+                if self.steals:
+                    task = self._steal(device_hint)
+                    if task is not None:
                         return task, device_hint
                 return None
-            task = self._q.popleft()
-            elig = self.eligible(task) or list(self.device_types)
-            return task, min(elig, key=lambda d: self.load[d])
+            # hintless worker: own indexed queues first, then overflow
+            for d, q in self._ready.items():
+                if q:
+                    self.queued[d] -= 1
+                    return q.popleft(), d
+            for i, task in enumerate(self._overflow):
+                if self.eligible(task):
+                    del self._overflow[i]
+                    return task, self._choose(task)
+            return None
+
+    def peek(self, device_hint: Optional[int] = None
+             ) -> Optional[HeteroTask]:
+        with self._lock:
+            if device_hint is not None:
+                q = self._ready[device_hint]
+                if q:
+                    return q[0]
+                for task in self._overflow:
+                    if device_hint in self.eligible(task):
+                        return task
+                return None
+            for q in self._ready.values():
+                if q:
+                    return q[0]
+            return self._overflow[0] if self._overflow else None
+
+    def __len__(self) -> int:
+        return sum(len(q) for q in self._ready.values()) + \
+            len(self._overflow)
 
 
-class LocalityAwareScheduler(Scheduler):
+class FifoScheduler(IndexedScheduler):
+    """Single shared FIFO (all tasks overflow); device = hint if eligible,
+    else least-loaded. Pop from the head is O(1)."""
+    # _place -> None inherited: every task goes to the overflow deque
+
+
+class LeastLoadedScheduler(IndexedScheduler):
+    """Place each task, at push time, on the least-pressured eligible device
+    (running + queued) — the multi-GPU load-balancing policy behind the
+    paper's Fig. 9. Idle devices steal, so imbalance self-corrects."""
+
+    def _place(self, task):
+        elig = self.eligible(task)
+        if not elig:
+            return None
+        return min(elig, key=self._pressure)
+
+
+class LocalityAwareScheduler(IndexedScheduler):
     """Prefer the device already holding the most argument bytes (paper:
     "scheduler optimizes data locality to reduce memory transfers"), with a
-    load penalty so one hot device does not serialize the queue."""
+    load penalty so one hot device does not serialize the queue. No
+    stealing: a stolen task would pay the transfers locality avoided."""
+
+    steals = False
 
     def __init__(self, device_types, load_penalty_bytes: int = 1 << 20):
         super().__init__(device_types)
-        self._q: Deque[HeteroTask] = collections.deque()
         self.load_penalty = load_penalty_bytes
-
-    def push(self, task):
-        with self._lock:
-            self._q.append(task)
 
     def _score(self, task: HeteroTask, dev: int) -> float:
         return (task.arg_bytes_on(dev)
-                - self.load_penalty * self.load[dev])
+                - self.load_penalty * self._pressure(dev))
 
-    def pop(self, device_hint=None):
-        with self._lock:
-            for i, task in enumerate(self._q):
-                elig = self.eligible(task)
-                if not elig:
-                    continue
-                best = max(elig, key=lambda d: self._score(task, d))
-                if device_hint is not None and best != device_hint:
-                    continue
-                del self._q[i]
-                return task, best
-        return None
+    def _place(self, task):
+        elig = self.eligible(task)
+        if not elig:
+            return None
+        return max(elig, key=lambda d: self._score(task, d))
 
-    def __len__(self):
-        return len(self._q)
+    def _choose(self, task):
+        elig = self.eligible(task) or list(self.device_types)
+        return max(elig, key=lambda d: self._score(task, d))
 
 
-class RoundRobinScheduler(Scheduler):
+class RoundRobinScheduler(IndexedScheduler):
     def __init__(self, device_types):
         super().__init__(device_types)
-        self._q: Deque[HeteroTask] = collections.deque()
         self._next = 0
 
-    def push(self, task):
-        with self._lock:
-            self._q.append(task)
-
-    def pop(self, device_hint=None):
-        with self._lock:
-            for i, task in enumerate(self._q):
-                elig = self.eligible(task)
-                if not elig:
-                    continue
-                if device_hint is not None:
-                    if device_hint in elig:
-                        del self._q[i]
-                        return task, device_hint
-                    continue
-                dev = elig[self._next % len(elig)]
-                self._next += 1
-                del self._q[i]
-                return task, dev
-        return None
-
-    def __len__(self):
-        return len(self._q)
+    def _place(self, task):
+        elig = self.eligible(task)
+        if not elig:
+            return None
+        dev = elig[self._next % len(elig)]
+        self._next += 1
+        return dev
 
 
 SCHEDULERS = {

@@ -14,6 +14,12 @@ Runtime, and inter-rank messages follow the paper's two-phase protocol —
 
 Two payload paths are modeled, matching §3.2.3: HOST_STAGED (device→host →
 network → host→device) and DIRECT (device→device; "GPU-aware interconnect").
+The DIRECT path is real, not simulated: the sender snapshots the freshest
+*device* copy via ``Runtime._request_device_view`` (jax arrays are immutable,
+so no staging copy is needed), the payload travels as that device array, and
+the receiver lands it with one Device API ``transfer`` onto its own device —
+no host copy is materialized on either side. Per-path traffic is accounted
+in ``Rank.stats`` (``bytes_d2d`` vs ``bytes_staged``).
 Small messages (≤512B) inline the payload in the metadata message
 (§4.2.3). On a real TPU pod the network step lowers to ICI collectives
 (see distributed/collectives.py); this layer is the host-side control plane
@@ -31,7 +37,9 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core import HeteroObject, Runtime, RuntimeConfig
+from repro.core.device_api import transfer as d2d_transfer
 from repro.core.futures import HFuture
+from repro.core.hetero_object import HOST
 from repro.distributed import handlers as H
 
 INLINE_PAYLOAD_BYTES = 512
@@ -69,7 +77,8 @@ class Rank:
         self._out_lock = threading.Lock()
         self._pending_meta: Dict[int, Message] = {}
         self.objects: Dict[Any, HeteroObject] = {}   # global ptr -> object
-        self.stats = {"sent": 0, "received": 0, "bytes_out": 0}
+        self.stats = {"sent": 0, "received": 0, "bytes_out": 0,
+                      "bytes_d2d": 0, "bytes_staged": 0}
         self._stop = False
         self._thread = threading.Thread(target=self._pump, daemon=True,
                                         name=f"prema-rank{rank}")
@@ -94,8 +103,13 @@ class Rank:
             return fut
         meta.payload_shape = tuple(obj.shape)
         meta.payload_dtype = np.dtype(obj.dtype).str
-        # (1) async access request; payload follows when ready
-        access = obj.request_host(write=False)
+        # (1) async access request; payload follows when ready. DIRECT sends
+        # take a device view (no host staging, §3.2.3 Fig. 7); host-staged
+        # sends pin a host copy as before (Fig. 6).
+        if path == "direct":
+            access = self.runtime._request_device_view(obj)
+        else:
+            access = obj.request_host(write=False)
 
         def on_ready(_):
             with self._out_lock:
@@ -158,15 +172,22 @@ class Rank:
         for access, meta, obj in ready:
             if meta.path == "direct":
                 # device-aware interconnect (§3.2.3 Fig. 7): the NIC reads
-                # device memory directly — no host-staging copy
-                arr = np.asarray(access.get())
+                # device memory directly — the payload stays a device array
+                space, arr = access.get()   # arr: private on-device clone
+                if space == HOST:
+                    # no device copy existed; fall back to the staged path
+                    meta.path = "host"
             else:
                 # host-staged (§3.2.3 Fig. 6): explicit staging copy
                 arr = np.array(access.get())
-            obj.release()
+                obj.release()
             nbytes = arr.nbytes
-            if nbytes <= INLINE_PAYLOAD_BYTES:
-                meta.inline = arr.tobytes()          # §4.2.3 small-msg path
+            if meta.path == "direct":
+                self.stats["bytes_d2d"] += nbytes
+            else:
+                self.stats["bytes_staged"] += nbytes
+            if meta.path != "direct" and nbytes <= INLINE_PAYLOAD_BYTES:
+                meta.inline = np.asarray(arr).tobytes()  # §4.2.3 small msgs
                 self.cluster.deliver(meta)
             else:
                 self.cluster.deliver(meta)
@@ -194,7 +215,7 @@ class Rank:
             if meta is None:       # payload raced ahead of metadata
                 self._pending_meta[msg.msg_id] = msg
                 return
-            obj = self.runtime.hetero_object(msg.payload)
+            obj = self._adopt_payload(msg)
             self._invoke(meta, obj)
         elif msg.kind == "put":
             self.stats["received"] += 1
@@ -212,6 +233,19 @@ class Rank:
             self.send(msg.src, msg.handler, src_obj,
                       user={"object_key": msg.object_key})
 
+    def _adopt_payload(self, msg: Message) -> HeteroObject:
+        """Land an incoming payload in the local runtime. DIRECT payloads
+        (device arrays) are moved with one Device API transfer onto this
+        rank's device — never staged through host (paper §3.2.3 Fig. 7)."""
+        if msg.path == "direct" and not isinstance(msg.payload, np.ndarray):
+            dst = self.runtime.devices[0]
+            local = d2d_transfer(None, dst, msg.payload)
+            self.stats["bytes_d2d"] += msg.payload.nbytes
+            return self.runtime.adopt_device_array(local,
+                                                   dst.info.device_id)
+        self.stats["bytes_staged"] += msg.payload.nbytes
+        return self.runtime.hetero_object(msg.payload)
+
     def _invoke(self, meta: Message, obj: Optional[HeteroObject]):
         fn = H.resolve(meta.handler)
         ctx = HandlerContext(self, meta)
@@ -228,7 +262,11 @@ class Rank:
                 return
             if msg is _FLUSH:
                 continue          # woken to flush outgoing; loop does it
-            self._handle(msg)
+            try:
+                self._handle(msg)
+            except BaseException:   # a bad message must not kill the rank
+                import traceback
+                traceback.print_exc()
 
     def shutdown(self):
         self._stop = True

@@ -1,8 +1,13 @@
 import os
 
-# Tests must see exactly ONE device (the dry-run sets 512 in its own
-# process); keep any user XLA_FLAGS out of the test environment.
+# Tests run with a controlled TWO-device CPU view so the transfer engine's
+# multi-device paths (direct D2D copies, per-device transfer queues,
+# indexed scheduler placement) are exercised in-process. Any user-supplied
+# XLA_FLAGS are dropped first (the dry-run sets 512 in its own subprocess;
+# multi-device tests that need more spawn subprocesses with their own
+# counts).
 os.environ.pop("XLA_FLAGS", None)
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
 
 import jax  # noqa: E402
 

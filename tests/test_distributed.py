@@ -87,6 +87,54 @@ def test_put_overwrites_remote_object(cluster):
     np.testing.assert_allclose(target.get(), 7.0)
 
 
+def test_direct_path_device_payload_no_host_staging(cluster):
+    """path='direct' (§3.2.3 Fig. 7): a device-resident payload travels as a
+    device array and lands via one Device API transfer; both ends account
+    the traffic as D2D, not staged."""
+    data = np.arange(4096, dtype=np.float32).reshape(64, 64)
+    rt0 = cluster.ranks[0].runtime
+    obj = rt0.hetero_object(data)
+    rt0.run(lambda v: v + 1.0, [(obj, "rw")])   # leaves a device-only copy
+    rt0.barrier()
+    cluster.ranks[0].send(1, "test_recv", obj, path="direct")
+    assert _wait_for(lambda: 0 in _received)
+    np.testing.assert_allclose(_received[0], data + 1.0)
+    assert cluster.ranks[0].stats["bytes_d2d"] >= data.nbytes
+    assert cluster.ranks[1].stats["bytes_d2d"] >= data.nbytes
+    assert cluster.ranks[0].stats["bytes_staged"] == 0
+
+
+def test_direct_send_survives_subsequent_donating_writer(cluster):
+    """Regression: a DIRECT send snapshots the device copy; a writer task
+    submitted right after must not delete the payload via buffer donation
+    (the send pins the view, and the payload is a private clone)."""
+    data = np.arange(4096, dtype=np.float32).reshape(64, 64)
+    rt0 = cluster.ranks[0].runtime
+    for trial in range(5):
+        _received.pop(0, None)
+        obj = rt0.hetero_object(data.copy())
+        rt0.run(lambda v: v + 1.0, [(obj, "rw")])
+        rt0.barrier()
+        cluster.ranks[0].send(1, "test_recv", obj, path="direct")
+        # donation-eligible writer racing the in-flight snapshot
+        rt0.run(lambda v: v * 0.0, [(obj, "rw")])
+        rt0.barrier()
+        assert _wait_for(lambda: 0 in _received), f"trial {trial}: lost"
+        np.testing.assert_allclose(_received[0], data + 1.0,
+                                   err_msg=f"trial {trial}")
+
+
+def test_direct_path_host_only_falls_back_to_staged(cluster):
+    """A direct send of an object with no device copy degrades gracefully
+    to the host-staged protocol."""
+    data = np.arange(1024, dtype=np.float32)
+    obj = cluster.ranks[0].runtime.hetero_object(data)
+    cluster.ranks[0].send(1, "test_recv", obj, path="direct")
+    assert _wait_for(lambda: 0 in _received)
+    np.testing.assert_allclose(_received[0], data)
+    assert cluster.ranks[0].stats["bytes_staged"] >= data.nbytes
+
+
 def test_get_remote_object(cluster):
     src_obj = cluster.ranks[1].runtime.hetero_object(
         np.full((16,), 3.0, np.float32))

@@ -3,9 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.models import attention as A
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.models import attention as A  # noqa: E402
 from repro.models import layers as L
 from repro.models import ssm as S
 from repro.models import rglru as R

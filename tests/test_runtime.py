@@ -5,9 +5,15 @@ import time
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core import (HOST, HeteroTask, Runtime, RuntimeConfig, TaskState)
+try:        # hypothesis is optional: only the DAG property test needs it
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core import (HOST, HeteroTask, Runtime,  # noqa: E402
+                        RuntimeConfig, TaskState)
 
 
 def add_one(x, out):
@@ -132,10 +138,25 @@ def test_all_schedulers_complete(sched):
         np.testing.assert_allclose(x.get(), 10.0)
 
 
-@settings(max_examples=15, deadline=None)
-@given(st.lists(st.tuples(st.integers(0, 4), st.integers(0, 4),
-                          st.booleans()), min_size=1, max_size=25))
-def test_random_dag_equals_sequential(ops_list):
+if HAVE_HYPOTHESIS:
+    _dag_decorators = [
+        settings(max_examples=15, deadline=None),
+        given(st.lists(st.tuples(st.integers(0, 4), st.integers(0, 4),
+                                 st.booleans()), min_size=1, max_size=25))]
+else:
+    _dag_decorators = [pytest.mark.skip(reason="hypothesis not installed")]
+
+
+def _apply(decorators):
+    def wrap(fn):
+        for d in reversed(decorators):
+            fn = d(fn)
+        return fn
+    return wrap
+
+
+@_apply(_dag_decorators)
+def test_random_dag_equals_sequential(ops_list=None):
     """Property: any random read/write program gives results identical to
     sequential execution (the paper's correctness guarantee)."""
     with Runtime(RuntimeConfig(memory_capacity=1 << 28)) as rt:
