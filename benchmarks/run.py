@@ -44,10 +44,15 @@ def main() -> None:
             traceback.print_exc()
 
     _section("dry-run / roofline summary")
-    for f in sorted(glob.glob(os.path.join(HERE, "results", "dryrun",
-                                           "*.json"))):
+    result_files = sorted(glob.glob(os.path.join(HERE, "results", "dryrun",
+                                                 "*.json")))
+    for f in result_files:
+        if os.path.basename(f).startswith("rt_ladder__"):
+            continue           # runtime-ladder payloads summarized below
         with open(f) as fh:
             d = json.load(fh)
+        if not isinstance(d, dict):
+            continue
         if d.get("probe") is not None or d.get("skipped"):
             continue
         if "error" in d:
@@ -57,6 +62,39 @@ def main() -> None:
         print(f"dryrun_{d['arch']}__{d['shape']}__{pods},"
               f"{d.get('compile_s', '')},"
               f"bottleneck={d.get('bottleneck')};chips={d.get('chips')}")
+
+    _section("runtime ladder / residency report")
+    for f in result_files:
+        base = os.path.basename(f)
+        if not base.startswith("rt_ladder__"):
+            continue
+        with open(f) as fh:
+            d = json.load(fh)
+        tag = base[len("rt_ladder__"):-len(".json")]
+        if isinstance(d, dict) and "error" in d:
+            print(f"rt_{tag},,ERROR")
+        elif isinstance(d, dict) and "bytes_moved_ratio" in d:
+            # SCHED-Locality: gravity-vs-baseline byte accounting
+            print(f"rt_{tag},,"
+                  f"baseline_moved={d['baseline']['bytes_moved']};"
+                  f"gravity_moved={d['gravity']['bytes_moved']};"
+                  f"ratio={d['bytes_moved_ratio']}")
+        elif isinstance(d, list):
+            for row in d:
+                for key, val in row.items():
+                    if not key.endswith("_stats") or not isinstance(val,
+                                                                    dict):
+                        continue
+                    rung = key[:-len("_stats")]
+                    pools = (f"stage={val.get('staging_hits')}/"
+                             f"{val.get('staging_misses')};"
+                             f"req={val.get('request_pool_hits')}/"
+                             f"{val.get('request_pool_misses')}")
+                    moved = sum(val.get(k) or 0 for k in
+                                ("bytes_h2d", "bytes_d2h", "bytes_d2d"))
+                    print(f"rt_{tag}_{rung}_{row['size']},,"
+                          f"moved={moved};{pools};"
+                          f"evict={val.get('evictions')}")
     if failures:
         print(f"# failed sections: {failures}", flush=True)
         sys.exit(1)

@@ -80,8 +80,8 @@ def run_cell(arch, shape, multi_pod, opt_level, timeout=3600, probe=None):
 def rt_ladder_rungs():
     sys.path.insert(0, os.path.join(REPO, "benchmarks"))
     sys.path.insert(0, os.path.join(REPO, "src"))
-    from tasking_overhead import LADDER
-    return [name for name, _ in LADDER]
+    from tasking_overhead import EXTRA_RUNGS, LADDER
+    return [name for name, _ in LADDER] + list(EXTRA_RUNGS)
 
 
 def run_rt_rung(rung, devices=2, sizes="64,128", iters=30, timeout=1800):
@@ -113,12 +113,17 @@ def main():
                          "(TF-Baseline … TF-Prefetch, TF-D2D)")
     ap.add_argument("--rt-devices", type=int, default=2,
                     help="virtual devices for the runtime ladder")
+    ap.add_argument("--rt-sizes", default="64,128",
+                    help="matrix sizes for the runtime ladder (SCHED-"
+                         "Locality uses the largest)")
+    ap.add_argument("--rt-iters", type=int, default=30)
     ap.add_argument("--only-rt-ladder", action="store_true")
     args = ap.parse_args()
     os.makedirs(OUT_DIR, exist_ok=True)
     if args.rt_ladder or args.only_rt_ladder:
         for rung in rt_ladder_rungs():
-            run_rt_rung(rung, devices=args.rt_devices)
+            run_rt_rung(rung, devices=args.rt_devices,
+                        sizes=args.rt_sizes, iters=args.rt_iters)
         if args.only_rt_ladder:
             print("sweep done", flush=True)
             return

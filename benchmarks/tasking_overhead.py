@@ -14,6 +14,13 @@ Ladder (paper §4.1 + transfer engine):
   TF-MultQueue   + multiple in-flight launches (multi-stream analogue)
   TF-Prefetch    + argument prefetch pipeline (transfers overlap compute)
   TF-D2D         + direct device→device transfers (no host bounce)
+  SCHED-Locality + data-gravity placement (residency-ledger cost model)
+
+The SCHED-Locality rung is measured on a chunk-update workload (rw task
+chains over persistent chunks, the over-decomposition pattern) under both
+the PR 1 baseline scheduler and the gravity scheduler, reporting bytes
+moved (h2d + d2h + d2d) and throughput for each — the paper's "place
+tasks where their data lives" claim as a measurable byte delta.
 """
 from __future__ import annotations
 
@@ -61,9 +68,62 @@ LADDER = [
 
 LADDER_BY_NAME = dict(LADDER)
 
+# rungs with their own workload/measurement, appended after the ladder
+EXTRA_RUNGS = ["SCHED-Locality"]
+
+# subset of Runtime.stats() recorded per rung in the JSON report
+_REPORT_KEYS = ("staging_hits", "staging_misses", "request_pool_hits",
+                "request_pool_misses", "bytes_h2d", "bytes_d2h",
+                "bytes_d2d", "evictions", "prefetch_hits",
+                "prefetch_stalls", "prefetch_misses", "bytes_resident")
+
 
 def dgemm(a, b, c):
     return (a @ b).astype(c.dtype)
+
+
+def locality_kernel(w):
+    return (w * 1.000001).astype(w.dtype)
+
+
+def bench_sched_locality(n: int = 384, iters: int = 120,
+                         weights: int = 8) -> Dict:
+    """Chunk-update workload (the over-decomposition pattern): ``iters``
+    rw tasks round-robin over ``weights`` persistent n×n chunks, each
+    updating its chunk in place. Every placement hop moves the whole chunk
+    (the write invalidates the old replica), so bytes moved scale with how
+    often the scheduler bounces a chunk off its home. The PR 1 locality
+    scheduler's flat 1MiB pressure penalty overwhelms sub-megabyte
+    residency, so transient queue imbalance hops chunks between devices;
+    data-gravity placement keeps each chain on its chunk's device.
+    Reports bytes moved + throughput for both."""
+    row: Dict = {"size": n, "iters": iters, "weights": weights}
+    for label, sched in (("baseline", "locality"), ("gravity", "gravity")):
+        with Runtime(RuntimeConfig(memory_capacity=1 << 30,
+                                   scheduler=sched)) as rt:
+            warm = rt.hetero_object(np.zeros((n, n), np.float32))
+            rt.run(locality_kernel, [(warm, "rw")])   # compile
+            rt.barrier()
+            ws = [rt.hetero_object(
+                np.random.rand(n, n).astype(np.float32))
+                for _ in range(weights)]
+            base_stats = rt.stats()
+            t0 = time.perf_counter()
+            for i in range(iters):
+                rt.run(locality_kernel, [(ws[i % weights], "rw")])
+            rt.barrier(timeout=600)
+            dt = time.perf_counter() - t0
+            s = rt.stats()
+        moved = {k: s[k] - base_stats[k]
+                 for k in ("bytes_h2d", "bytes_d2h", "bytes_d2d")}
+        row[label] = {
+            "its": round(iters / dt, 1),
+            **moved,
+            "bytes_moved": sum(moved.values()),
+        }
+    base, grav = row["baseline"]["bytes_moved"], row["gravity"]["bytes_moved"]
+    row["bytes_moved_ratio"] = round(grav / base, 4) if base else None
+    return row
 
 
 def bench_config(name: str, overrides: Dict, n: int, iters: int,
@@ -123,17 +183,15 @@ def run(sizes=(64, 128, 256, 512), iters=60, only=None) -> List[Dict]:
                               collect_stats=stats)
             row[name] = round(its, 1)
             row[name + "_vs_direct"] = round(its / base, 3)
-            if overrides.get("prefetch"):
-                row[name + "_prefetch_hits"] = stats.get("prefetch_hits", 0)
-            if overrides.get("d2d"):
-                row[name + "_transfers_d2d"] = stats.get("transfers_d2d", 0)
+            row[name + "_stats"] = {k: stats.get(k) for k in _REPORT_KEYS}
         rows.append(row)
     return rows
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None, choices=[k for k, _ in LADDER],
+    ap.add_argument("--only", default=None,
+                    choices=[k for k, _ in LADDER] + EXTRA_RUNGS,
                     help="run a single ladder rung (used by the sweep)")
     ap.add_argument("--sizes", default="64,128,256,512")
     ap.add_argument("--iters", type=int, default=60)
@@ -141,8 +199,20 @@ def main(argv=None):
                     help="also write rows as JSON to this path")
     args = ap.parse_args(argv)
     sizes = tuple(int(s) for s in args.sizes.split(","))
-    rows = run(sizes=sizes, iters=args.iters, only=args.only)
     print("name,us_per_call,derived")
+    if args.only == "SCHED-Locality":
+        row = bench_sched_locality(n=max(sizes), iters=max(args.iters, 20))
+        for label in ("baseline", "gravity"):
+            us = 1e6 / row[label]["its"]
+            print(f"fig8_SCHED-Locality_{label}_{row['size']},{us:.1f},"
+                  f"moved={row[label]['bytes_moved']}")
+        print(f"fig8_SCHED-Locality_ratio_{row['size']},,"
+              f"x{row['bytes_moved_ratio']}")
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(row, f, indent=2)
+        return
+    rows = run(sizes=sizes, iters=args.iters, only=args.only)
     for row in rows:
         n = row["size"]
         for name, _ in LADDER:

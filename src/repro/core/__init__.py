@@ -8,7 +8,11 @@ to the Device API.
 from repro.core.futures import HFuture  # noqa: F401
 from repro.core.hetero_object import HOST, HeteroObject  # noqa: F401
 from repro.core.hetero_task import Access, HeteroTask, TaskState  # noqa: F401
+from repro.core.residency import (PLACEMENTS, DataGravityPolicy,  # noqa: F401
+                                  LoadOnlyPolicy, PlacementPolicy,
+                                  ResidencyLedger)
 from repro.core.runtime import Runtime, RuntimeConfig  # noqa: F401
 from repro.core.scheduler import (SCHEDULERS, FifoScheduler,  # noqa: F401
-                                  LeastLoadedScheduler, LocalityAwareScheduler,
-                                  RoundRobinScheduler, Scheduler)
+                                  GravityScheduler, LeastLoadedScheduler,
+                                  LocalityAwareScheduler, RoundRobinScheduler,
+                                  Scheduler)

@@ -22,8 +22,6 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
-from repro.core.futures import HFuture
-
 
 @dataclasses.dataclass
 class DeviceInfo:
@@ -66,6 +64,14 @@ class Device(abc.ABC):
 
     @abc.abstractmethod
     def download(self, dev_array: Any) -> np.ndarray: ...
+
+    def download_into(self, dev_array: Any, out: np.ndarray) -> np.ndarray:
+        """Copy a resident array into a caller-provided host buffer — the
+        runtime's pooled D2H staging path (chunks of a device array land
+        in slices of a StagingPool buffer). Backends with pinned-memory
+        DMA override this; the default bounces through ``download``."""
+        np.copyto(out, self.download(dev_array))
+        return out
 
     @abc.abstractmethod
     def transfer_from(self, src: Optional["Device"], dev_array: Any) -> Any:

@@ -66,6 +66,12 @@ class HeteroObject:
         with self.lock:
             return set(self.copies)
 
+    def resident_devices(self) -> Set[int]:
+        """Devices holding a valid replica, answered by the runtime's
+        residency ledger (the placement/landing source of truth; never
+        includes HOST)."""
+        return self._rt.residency.devices_of(self)
+
     def has_copy(self, space: int) -> bool:
         with self.lock:
             return space in self.copies

@@ -1,18 +1,18 @@
-"""Memory layer: per-device usage accounting, LRU offload, staging pools.
+"""Memory pools: reusable host staging buffers + request/future freelists.
 
 Paper analogues:
   §4.1.1 page-locked host pool  → ``StagingPool``: preallocated, reused host
                                   staging buffers keyed by (shape, dtype)
-  §4.1.2 custom device allocator → usage ledger + buffer donation (the XLA
-                                  analogue of reusing a preallocated arena)
-  §3.1.1 LRU offload             → ``MemoryMonitor.ensure_capacity`` spills
-                                  least-recently-used idle objects to host
+  §4.1.4 request pools           → ``RequestPool``: freelist of futures
+
+Per-device residency accounting and LRU offload (paper §3.1.1) moved to the
+residency ledger — see ``repro.core.residency.ResidencyLedger``.
 """
 from __future__ import annotations
 
 import collections
 import threading
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Tuple
 
 import numpy as np
 
@@ -53,13 +53,17 @@ class StagingPool:
 
 
 class RequestPool:
-    """Freelist of request/future objects (paper §4.1.4)."""
+    """Freelist of request/future objects (paper §4.1.4). ``hits`` counts
+    recycled acquires, ``misses`` fresh constructions — surfaced through
+    ``Runtime.stats()``."""
 
     def __init__(self, factory: Callable[[], Any], enabled: bool = True):
         self._factory = factory
         self.enabled = enabled
         self._free: List[Any] = []
         self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
 
     def acquire(self) -> Any:
         if self.enabled:
@@ -67,7 +71,9 @@ class RequestPool:
                 if self._free:
                     obj = self._free.pop()
                     obj.reset()
+                    self.hits += 1
                     return obj
+        self.misses += 1
         return self._factory()
 
     def release(self, obj: Any) -> None:
@@ -76,55 +82,3 @@ class RequestPool:
         with self._lock:
             if len(self._free) < 1024:
                 self._free.append(obj)
-
-
-class MemoryMonitor:
-    """Tracks bytes resident per device; evicts LRU idle objects under
-    pressure. Objects register/unregister copies; ``touch`` updates recency."""
-
-    def __init__(self, capacities: Dict[int, int]):
-        self._cap = dict(capacities)
-        self._usage: Dict[int, int] = {d: 0 for d in capacities}
-        self._lru: Dict[int, "collections.OrderedDict[int, Any]"] = {
-            d: collections.OrderedDict() for d in capacities}
-        self._lock = threading.RLock()
-        self.evictions = 0
-
-    def usage(self, device_id: int) -> int:
-        return self._usage[device_id]
-
-    def capacity(self, device_id: int) -> int:
-        return self._cap[device_id]
-
-    def register(self, device_id: int, obj, nbytes: int) -> None:
-        with self._lock:
-            self._usage[device_id] += nbytes
-            self._lru[device_id][id(obj)] = obj
-            self._lru[device_id].move_to_end(id(obj))
-
-    def unregister(self, device_id: int, obj, nbytes: int) -> None:
-        with self._lock:
-            self._usage[device_id] -= nbytes
-            self._lru[device_id].pop(id(obj), None)
-
-    def touch(self, device_id: int, obj) -> None:
-        with self._lock:
-            if id(obj) in self._lru[device_id]:
-                self._lru[device_id].move_to_end(id(obj))
-
-    def ensure_capacity(self, device_id: int, nbytes: int,
-                        evict: Callable[[Any, int], bool]) -> bool:
-        """Evict LRU objects (via ``evict(obj, device_id)``, which returns
-        False when an object is busy and must be skipped) until ``nbytes``
-        fits. Returns True on success."""
-        with self._lock:
-            if self._usage[device_id] + nbytes <= self._cap[device_id]:
-                return True
-            candidates = list(self._lru[device_id].values())
-        for obj in candidates:
-            if self._usage[device_id] + nbytes <= self._cap[device_id]:
-                return True
-            if evict(obj, device_id):
-                self.evictions += 1
-        with self._lock:
-            return self._usage[device_id] + nbytes <= self._cap[device_id]

@@ -23,17 +23,37 @@ Data movement is a first-class subsystem with three cooperating parts:
     transfer worker per device (paper §4.1.3's dedicated transfer queue,
     generalized), so copies targeting different devices never serialize
     behind each other and always overlap compute.
-  * Argument prefetch pipeline (``prefetch`` toggle): after launching a
-    task, the worker immediately claims its *next* task from the scheduler
-    (``Scheduler.assign``) and enqueues that task's argument transfers on
-    the transfer queues — the copies run while the current task computes,
-    and ``_launch`` merely awaits already-in-flight transfers. Hits are
-    counted in ``stats()["prefetch_hits"]``.
+  * Argument prefetch pipeline (``prefetch`` toggle, depth via
+    ``prefetch_depth``): after launching a task, the worker claims up to
+    ``prefetch_depth`` next tasks from the scheduler (``Scheduler.assign``)
+    and enqueues their argument transfers on the transfer queues — the
+    copies run while the current task computes, and ``_launch`` merely
+    awaits already-in-flight transfers. The queues are *priority* queues,
+    FIFO within a priority level: the immediately-next task's arguments
+    (depth 1) are never scheduled behind deeper staging — in the default
+    one-producer-per-queue pipeline enqueue order already guarantees
+    this, and the explicit priorities keep the invariant for any future
+    multi-producer path (e.g. cross-worker staging or queued demand
+    transfers). ``stats()["prefetch_hits"]`` counts argument copies that had
+    fully completed by launch time (true overlap);
+    ``stats()["prefetch_stalls"]`` counts copies that were claimed early
+    but still had to be awaited.
+
+Residency & placement (paper §3.1.1 + §3.1.3): a ``ResidencyLedger``
+(``core/residency.py``) is the single source of truth for which devices
+hold valid replicas of each object, with per-device byte accounting and
+LRU eviction. The scheduler's placement cost model scores devices against
+the ledger (data-gravity: bytes-to-move minus bytes-resident), and the
+distributed layer asks it where payloads with no known consumer should
+land.
 
 Large host→device copies are chunked through the ``StagingPool``
-(page-locked buffer analogue) in ``staging_chunk_bytes`` pieces, and pool
-buffers are recycled: staging buffers return to the pool when a host copy
-is dropped, transfer futures return to the ``RequestPool`` once consumed.
+(page-locked buffer analogue) in ``staging_chunk_bytes`` pieces, and the
+mirrored device→host path stages downloads into pooled buffers the same
+way — so host copies never alias device buffers that donation might
+recycle. Pool buffers are recycled: staging buffers return to the pool
+when a host copy is dropped, transfer futures return to the
+``RequestPool`` once consumed.
 
 Configuration toggles map 1:1 to the paper's optimization ladder (Fig. 8)
 so the benchmark can reproduce it:
@@ -44,12 +64,15 @@ so the benchmark can reproduce it:
   inflight         — §4.1.3 multiple compute queues (async window)
   dedicated_threads— §4.1.6 one worker per device
   prefetch         — §4.1.3 transfer/compute overlap (argument pipeline)
+  prefetch_depth   — §4.1.3 pipeline depth (tasks claimed ahead per worker)
   d2d              — §3.2.3 direct device-to-device transfers
+  scheduler        — §3.1.4 placement policy ("gravity" = data-gravity)
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import itertools
 import queue
 import threading
 import time
@@ -62,14 +85,16 @@ from repro.core import device_api
 from repro.core.device_api import Device, JaxDevice, discover_devices
 from repro.core.futures import HFuture
 from repro.core.hetero_object import HOST, HeteroObject
-from repro.core.hetero_task import Access, HeteroTask, TaskState
-from repro.core.memory import MemoryMonitor, RequestPool, StagingPool
+from repro.core.hetero_task import HeteroTask, TaskState
+from repro.core.memory import RequestPool, StagingPool
+from repro.core.residency import PLACEMENTS, ResidencyLedger
 from repro.core.scheduler import SCHEDULERS, Scheduler
 
 
 @dataclasses.dataclass
 class RuntimeConfig:
-    scheduler: str = "locality"
+    scheduler: str = "gravity"
+    placement: Optional[str] = None   # override the scheduler's cost model
     staging_pool: bool = True
     cache_jit: bool = True
     request_pool: bool = True
@@ -79,6 +104,7 @@ class RuntimeConfig:
     sync_dispatch: bool = False   # TF-Baseline: block after every launch
     d2d: bool = True              # direct device→device transfers (§3.2.3)
     prefetch: bool = True         # argument prefetch pipeline (§4.1.3)
+    prefetch_depth: int = 1       # tasks claimed ahead per worker
     memory_capacity: Optional[int] = None
     staging_chunk_bytes: int = 8 << 20   # chunk host uploads above this size
     poll_interval_s: float = 0.0005
@@ -93,10 +119,13 @@ class Runtime:
         for d in self.devices:
             if isinstance(d, JaxDevice):
                 d.cache_jit = self.cfg.cache_jit
-        self.memory = MemoryMonitor(
+        self.residency = ResidencyLedger(
             {d.info.device_id: d.info.memory_capacity for d in self.devices})
         self.scheduler: Scheduler = SCHEDULERS[self.cfg.scheduler](
             {d.info.device_id: d.info.device_type for d in self.devices})
+        if self.cfg.placement is not None:
+            self.scheduler.placement = PLACEMENTS[self.cfg.placement]()
+        self.scheduler.bind_residency(self.residency)
         self.staging = StagingPool(self.cfg.staging_pool)
         self.futures = RequestPool(HFuture, self.cfg.request_pool)
         self._lock = threading.RLock()
@@ -106,11 +135,14 @@ class Runtime:
         self._stats = {"tasks": 0, "transfers_h2d": 0, "transfers_d2h": 0,
                        "transfers_d2d": 0, "bytes_h2d": 0, "bytes_d2h": 0,
                        "bytes_d2d": 0, "prefetch_hits": 0,
-                       "prefetch_misses": 0}
+                       "prefetch_misses": 0, "prefetch_stalls": 0}
         self._threads: List[threading.Thread] = []
-        # one transfer queue per device (paper §4.1.3, generalized): copies
-        # bound for different devices proceed independently
-        self._xfer_qs: Dict[int, "queue.Queue"] = {}
+        # one priority transfer queue per device (paper §4.1.3,
+        # generalized): copies bound for different devices proceed
+        # independently, and within a device the next task's arguments
+        # (priority 1) outrank deeper prefetch staging (priority 2+)
+        self._xfer_qs: Dict[int, "queue.PriorityQueue"] = {}
+        self._xfer_seq = itertools.count()   # FIFO tiebreak within priority
         self._start_workers()
 
     # ------------------------------------------------------------------
@@ -128,11 +160,31 @@ class Runtime:
         distributed DIRECT payload path (paper §3.2.3)."""
         obj = HeteroObject(self, shape=tuple(dev_array.shape),
                            dtype=np.dtype(dev_array.dtype), name=name)
-        self.memory.ensure_capacity(device_id, obj.nbytes, self._evict)
+        self.residency.ensure_capacity(device_id, obj.nbytes, self._evict)
         with obj.lock:
             obj.copies[device_id] = dev_array
-            self.memory.register(device_id, obj, obj.nbytes)
+            self.residency.record(device_id, obj)
         return obj
+
+    def pick_landing_device(self, preferred: Optional[int] = None,
+                            device_type: Optional[str] = None) -> int:
+        """Where should externally-arriving data (a distributed DIRECT
+        payload) land? The consumer task's device when the sender named
+        one, else the residency ledger's least-loaded device (optionally
+        restricted to ``device_type``) — never a hardwired device 0."""
+        ids = {d.info.device_id for d in self.devices}
+        if preferred is not None and preferred in ids:
+            return preferred
+        if device_type is not None:
+            typed = {d.info.device_id for d in self.devices
+                     if d.info.device_type == device_type}
+            ids = typed or ids
+        queued = getattr(self.scheduler, "queued", {})
+
+        def pressure(d: int) -> int:
+            return self.scheduler.load.get(d, 0) + queued.get(d, 0)
+
+        return self.residency.least_loaded_device(pressure, among=ids)
 
     def submit(self, task: HeteroTask, kernel: Callable) -> HFuture:
         """Enqueue an execution request; returns the task's future."""
@@ -177,7 +229,9 @@ class Runtime:
         s = dict(self._stats)
         s["staging_hits"] = self.staging.hits
         s["staging_misses"] = self.staging.misses
-        s["evictions"] = self.memory.evictions
+        s["request_pool_hits"] = self.futures.hits
+        s["request_pool_misses"] = self.futures.misses
+        s.update(self.residency.gauges())
         return s
 
     def shutdown(self) -> None:
@@ -185,7 +239,8 @@ class Runtime:
             self._shutdown = True
             self._work.notify_all()
         for q_ in self._xfer_qs.values():
-            q_.put(None)
+            # inf priority: the sentinel sorts behind every queued transfer
+            q_.put((float("inf"), next(self._xfer_seq), None, None))
         for t in self._threads:
             t.join(timeout=5)
 
@@ -270,6 +325,13 @@ class Runtime:
     def _release_host(self, obj: HeteroObject) -> None:
         with obj.lock:
             obj.host_pins = max(0, obj.host_pins - 1)
+            # a pooled buffer whose HOST copy was dropped while pinned
+            # (e.g. free() between request and release) is handed back to
+            # the pool once the last pin goes away
+            orphan = getattr(obj, "_orphan_host", None)
+            if obj.host_pins == 0 and orphan is not None:
+                self.staging.release(orphan)
+                obj._orphan_host = None
 
     def _release_device_view(self, obj: HeteroObject) -> None:
         with obj.lock:
@@ -290,11 +352,16 @@ class Runtime:
         if space in obj.copies:
             arr = obj.copies.pop(space)
             if space != HOST:
-                self.memory.unregister(space, obj, obj.nbytes)
-            elif getattr(obj, "_pooled_host", False) and obj.host_pins == 0:
+                self.residency.drop(space, obj)
+            elif getattr(obj, "_pooled_host", False):
                 # recycle the staging buffer (paper §4.1.1: the page-locked
-                # pool only pays off if buffers actually return to it)
-                self.staging.release(arr)
+                # pool only pays off if buffers actually return to it); if
+                # a pin still hands the buffer out, park it as an orphan —
+                # _release_host returns it to the pool with the last pin
+                if obj.host_pins == 0:
+                    self.staging.release(arr)
+                else:
+                    obj._orphan_host = arr
                 obj._pooled_host = False
 
     def _stage_to_host(self, obj: HeteroObject) -> np.ndarray:
@@ -308,14 +375,42 @@ class Runtime:
             pooled = True
         else:
             dev_arr = obj.copies[src]
-            arr = self._device(src).download(dev_arr)
+            arr, pooled = self._download_device(self._device(src), dev_arr)
             self._stats["transfers_d2h"] += 1
             self._stats["bytes_d2h"] += obj.nbytes
-            pooled = False
         with obj.lock:
             obj.copies[HOST] = arr
             obj._pooled_host = pooled
         return arr
+
+    def _download_device(self, device: Device,
+                         dev_arr: Any) -> Tuple[np.ndarray, bool]:
+        """Device→host staging mirroring ``_upload_host``: the host copy
+        lands in a pooled StagingPool buffer (chunked above
+        ``staging_chunk_bytes``) and NEVER aliases the device buffer —
+        ``download`` on CPU backends returns zero-copy views of XLA
+        buffers, which donation may recycle under the view. Returns
+        (host array, is_pooled)."""
+        if not self.staging.enabled:
+            # no pool: still a private copy, never an aliasing view
+            return np.array(device.download(dev_arr)), False
+        shape = tuple(dev_arr.shape)
+        dtype = np.dtype(dev_arr.dtype)
+        buf = self.staging.acquire(shape, dtype)
+        chunk = self.cfg.staging_chunk_bytes
+        nbytes = buf.nbytes
+        if (chunk <= 0 or nbytes <= chunk or buf.ndim == 0
+                or shape[0] < 2):
+            device.download_into(dev_arr, buf)
+            return buf, True
+        # chunked: slice on device, download piecewise into the pool
+        # buffer so no full-size intermediate host array materializes
+        row_bytes = max(1, nbytes // shape[0])
+        rows_per = max(1, chunk // row_bytes)
+        for i in range(0, shape[0], rows_per):
+            device.download_into(dev_arr[i:i + rows_per],
+                                 buf[i:i + rows_per])
+        return buf, True
 
     def _upload_host(self, device: Device, host_arr: np.ndarray) -> Any:
         """Host→device copy; large arrays stream through pooled staging
@@ -364,12 +459,13 @@ class Runtime:
         """Coherence walk: make a VALID copy resident on device_id.
 
         Source preference (paper §3.2.3): (1) already resident — no copy;
-        (2) another device holds a copy and d2d is on — one direct
-        device→device transfer; (3) generic path — stage through host."""
+        (2) the residency ledger knows another device holding a replica and
+        d2d is on — one direct device→device transfer; (3) generic path —
+        stage through host."""
         with obj.lock:
             if device_id in obj.copies:
                 arr = obj.copies[device_id]
-                self.memory.touch(device_id, obj)
+                self.residency.touch(device_id, obj)
                 if will_write:
                     for sp in [s for s in obj.copies if s != device_id]:
                         self._drop_copy(obj, sp)
@@ -377,14 +473,16 @@ class Runtime:
             src_dev = None
             src_arr = None
             if self.cfg.d2d:
-                src_dev = next((s for s in obj.copies if s != HOST), None)
-                if src_dev is not None:
-                    src_arr = obj.copies[src_dev]
+                for cand in sorted(self.residency.devices_of(obj)):
+                    if cand != device_id and cand in obj.copies:
+                        src_dev, src_arr = cand, obj.copies[cand]
+                        break
         if src_dev is not None:
             # direct D2D: never materializes a host copy (jax arrays are
             # immutable, so the snapshot taken above stays valid even if the
             # source copy is concurrently evicted)
-            self.memory.ensure_capacity(device_id, obj.nbytes, self._evict)
+            self.residency.ensure_capacity(device_id, obj.nbytes,
+                                           self._evict)
             dev_arr = device_api.transfer(self._device(src_dev),
                                           self._device(device_id), src_arr)
             self._stats["transfers_d2d"] += 1
@@ -395,7 +493,7 @@ class Runtime:
             # result on device, so reserve double before choosing it
             chunked = (self.staging.enabled
                        and 0 < self.cfg.staging_chunk_bytes < obj.nbytes)
-            self.memory.ensure_capacity(
+            self.residency.ensure_capacity(
                 device_id, obj.nbytes * (2 if chunked else 1), self._evict)
             dev_arr = self._upload_host(self._device(device_id), host_arr)
             self._stats["transfers_h2d"] += 1
@@ -405,7 +503,7 @@ class Runtime:
                 dev_arr = obj.copies[device_id]
             else:
                 obj.copies[device_id] = dev_arr
-                self.memory.register(device_id, obj, obj.nbytes)
+                self.residency.record(device_id, obj)
             if will_write:
                 for sp in [s for s in obj.copies if s != device_id]:
                     self._drop_copy(obj, sp)
@@ -425,7 +523,7 @@ class Runtime:
             self._threads.append(th)
         if self.cfg.transfer_thread:
             for d in self.devices:
-                q_: "queue.Queue" = queue.Queue()
+                q_: "queue.PriorityQueue" = queue.PriorityQueue()
                 self._xfer_qs[d.info.device_id] = q_
                 th = threading.Thread(
                     target=self._transfer_worker, args=(q_,), daemon=True,
@@ -433,24 +531,26 @@ class Runtime:
                 th.start()
                 self._threads.append(th)
 
-    def _transfer_worker(self, q_: "queue.Queue"):
+    def _transfer_worker(self, q_: "queue.PriorityQueue"):
         while True:
-            item = q_.get()
-            if item is None:
+            _prio, _seq, fn, fut = q_.get()
+            if fn is None:
                 return
-            fn, fut = item
             try:
                 fut.set_result(fn())
             except BaseException as e:   # pragma: no cover
                 fut.set_error(e)
 
-    def _async_transfer(self, device_id: int, fn: Callable) -> HFuture:
+    def _async_transfer(self, device_id: int, fn: Callable,
+                        priority: int = 0) -> HFuture:
         """Run ``fn`` on ``device_id``'s transfer queue (or inline when the
-        transfer threads are disabled). Returns a pooled future."""
+        transfer threads are disabled). Lower ``priority`` runs first —
+        deep prefetch staging (priority 2+) never delays the next task's
+        arguments (priority 1). Returns a pooled future."""
         fut = self.futures.acquire()
         q_ = self._xfer_qs.get(device_id)
         if q_ is not None:
-            q_.put((fn, fut))
+            q_.put((priority, next(self._xfer_seq), fn, fut))
         else:
             try:
                 fut.set_result(fn())
@@ -459,13 +559,16 @@ class Runtime:
         return fut
 
     # -- argument prefetch pipeline ------------------------------------
-    def _try_prefetch(self, device_hint: Optional[int]):
+    def _try_prefetch(self, device_hint: Optional[int], depth: int = 1):
         """Claim the next task early (Scheduler.assign) and enqueue its
         argument transfers so they overlap the current task's compute.
-        Returns (task, dev, transfer-future-or-None); the future resolves
-        to {obj_id: device array}. All of a task's arguments stage as ONE
-        transfer-queue item (per-argument handoffs cost more than they
-        overlap), and fully-resident tasks skip the queue entirely."""
+        ``depth`` is the task's position in the pipeline (1 = runs next)
+        and doubles as the transfer priority. Returns (task, dev,
+        transfer-future-or-None); the future resolves to
+        ({obj_id: device array}, needed-ids). All of a task's arguments
+        stage as ONE transfer-queue item (per-argument handoffs cost more
+        than they overlap), and fully-resident tasks skip the queue
+        entirely."""
         with self._lock:
             if self._shutdown:
                 return None
@@ -487,12 +590,13 @@ class Runtime:
             return task, dev, None          # nothing to move
         fut = self._async_transfer(dev, lambda: (
             {id(o): self._ensure_on_device(o, dev, False) for o in objs},
-            need))
+            need), priority=depth)
         return task, dev, fut
 
     def _worker(self, device_hint: Optional[int]):
         inflight: List[Tuple[HeteroTask, Any]] = []
         staged: "collections.deque" = collections.deque()  # prefetched tasks
+        depth = max(1, self.cfg.prefetch_depth)
         while True:
             pmap = None
             if staged:
@@ -524,11 +628,15 @@ class Runtime:
             except BaseException as e:
                 self._finish(task, error=e)
                 continue
-            # pipeline: claim the next task + start its transfers while the
-            # launch above computes
-            if self.cfg.prefetch and not staged:
-                nxt = self._try_prefetch(device_hint)
-                if nxt is not None:
+            # pipeline: claim the next prefetch_depth tasks + start their
+            # transfers while the launch above computes; deeper positions
+            # stage at lower transfer-queue priority
+            if self.cfg.prefetch:
+                while len(staged) < depth:
+                    nxt = self._try_prefetch(device_hint,
+                                             depth=1 + len(staged))
+                    if nxt is None:
+                        break
                     staged.append(nxt)
             if self.cfg.sync_dispatch or self.cfg.inflight <= 1:
                 self._device(dev).synchronize(handle)
@@ -560,10 +668,14 @@ class Runtime:
         launch asynchronously via the Device API."""
         staged: Dict[int, Any] = {}
         needed: frozenset = frozenset()
+        overlapped = False
         if prefetched is not None:
-            # transfers were issued when the task was assigned; by now they
-            # are usually done — the overlap the paper's transfer queue
-            # buys (§4.1.3)
+            # transfers were issued when the task was assigned; when they
+            # completed during the previous task's compute the copy was
+            # truly overlapped (a hit), otherwise the pipeline still had
+            # to wait here (a stall) — the distinction the paper's
+            # transfer-queue depth trades on (§4.1.3)
+            overlapped = prefetched.done()
             staged, needed = prefetched.get()
             self.futures.release(prefetched)
         dev_args = []
@@ -571,8 +683,10 @@ class Runtime:
         for i, ref in enumerate(task.args):
             arr = staged.get(id(ref.obj))
             if arr is not None:
-                if id(ref.obj) in needed:   # an actually-overlapped copy
-                    self._stats["prefetch_hits"] += 1
+                if id(ref.obj) in needed:
+                    key = "prefetch_hits" if overlapped else \
+                        "prefetch_stalls"
+                    self._stats[key] += 1
             else:
                 if self.cfg.prefetch and prefetched is None \
                         and not ref.obj.has_copy(device_id):
@@ -598,8 +712,7 @@ class Runtime:
                         for sp in list(ref.obj.copies):
                             self._drop_copy(ref.obj, sp)
                         ref.obj.copies[device_id] = new_arr
-                        self.memory.register(device_id, ref.obj,
-                                             ref.obj.nbytes)
+                        self.residency.record(device_id, ref.obj)
                 wi += 1
         return handle
 

@@ -10,6 +10,14 @@ overflow deque. The old implementations re-scanned the whole global queue
 under one lock on every pop — O(queue length) per worker wake-up, which
 serialized the dedicated per-device threads (paper §4.1.6) behind the scan.
 
+Data-gravity placement (paper §3.1.3: "the scheduler optimizes data
+locality to reduce memory transfers"): the ready queues are re-keyed by
+*best placement* — a pluggable cost model (``core.residency.PLACEMENTS``)
+scores candidate devices by bytes-to-move minus bytes-resident (plus a
+pressure penalty) against the runtime's residency ledger, and ``push``
+indexes the task under the winner. The caller's device hint only selects
+*which queue to pop*, it no longer decides placement.
+
 Two extra hooks support the runtime's argument-prefetch pipeline
 (paper §4.1.3 — overlap transfers with compute):
   peek(device_hint)   — the next task this device would receive (no removal)
@@ -22,19 +30,29 @@ from __future__ import annotations
 import abc
 import collections
 import threading
-from typing import Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Deque, Dict, List, Optional, Tuple
 
 from repro.core.hetero_task import HeteroTask
+from repro.core.residency import (DataGravityPolicy, PlacementPolicy,
+                                  ResidencyLedger)
 
 
 class Scheduler(abc.ABC):
     """Device table: {device_id: device_type}. ``load`` is maintained by the
-    runtime (tasks queued+running per device) and may be used by policies."""
+    runtime (tasks queued+running per device) and may be used by policies.
+    ``placement`` is an optional cost model; the runtime binds its residency
+    ledger to it via ``bind_residency``."""
 
-    def __init__(self, device_types: Dict[int, str]):
+    def __init__(self, device_types: Dict[int, str],
+                 placement: Optional[PlacementPolicy] = None):
         self.device_types = dict(device_types)
         self.load: Dict[int, int] = {d: 0 for d in device_types}
+        self.placement = placement
         self._lock = threading.Lock()
+
+    def bind_residency(self, ledger: ResidencyLedger) -> None:
+        if self.placement is not None:
+            self.placement.bind(ledger)
 
     @abc.abstractmethod
     def push(self, task: HeteroTask) -> None: ...
@@ -79,8 +97,9 @@ class IndexedScheduler(Scheduler):
 
     steals = True
 
-    def __init__(self, device_types: Dict[int, str]):
-        super().__init__(device_types)
+    def __init__(self, device_types: Dict[int, str],
+                 placement: Optional[PlacementPolicy] = None):
+        super().__init__(device_types, placement)
         self._ready: Dict[int, Deque[HeteroTask]] = {
             d: collections.deque() for d in device_types}
         self._overflow: Deque[HeteroTask] = collections.deque()
@@ -198,10 +217,12 @@ class LeastLoadedScheduler(IndexedScheduler):
 
 
 class LocalityAwareScheduler(IndexedScheduler):
-    """Prefer the device already holding the most argument bytes (paper:
-    "scheduler optimizes data locality to reduce memory transfers"), with a
-    load penalty so one hot device does not serialize the queue. No
-    stealing: a stolen task would pay the transfers locality avoided."""
+    """PR 1 locality heuristic, kept as the baseline control arm: prefer
+    the device already holding the most argument bytes, minus a flat 1 MiB
+    load penalty per queued task. The penalty routinely overwhelms the
+    residency term for megabyte-scale arguments, so placement degenerates
+    to load balancing and resident objects bounce between devices — the
+    failure mode ``GravityScheduler`` fixes. No stealing."""
 
     steals = False
 
@@ -224,6 +245,30 @@ class LocalityAwareScheduler(IndexedScheduler):
         return max(elig, key=lambda d: self._score(task, d))
 
 
+class GravityScheduler(IndexedScheduler):
+    """Data-gravity placement (the default): the ready queues are re-keyed
+    by the placement cost model's best device — bytes-to-move minus
+    bytes-resident plus pressure, answered by the runtime's residency
+    ledger. No stealing: a stolen task pays exactly the transfers the
+    placement avoided."""
+
+    steals = False
+
+    def __init__(self, device_types,
+                 placement: Optional[PlacementPolicy] = None):
+        super().__init__(device_types, placement or DataGravityPolicy())
+
+    def _place(self, task):
+        elig = self.eligible(task)
+        if not elig:
+            return None
+        return self.placement.choose(task, elig, self._pressure)
+
+    def _choose(self, task):
+        elig = self.eligible(task) or list(self.device_types)
+        return self.placement.choose(task, elig, self._pressure)
+
+
 class RoundRobinScheduler(IndexedScheduler):
     def __init__(self, device_types):
         super().__init__(device_types)
@@ -240,6 +285,7 @@ class RoundRobinScheduler(IndexedScheduler):
 
 SCHEDULERS = {
     "fifo": FifoScheduler,
+    "gravity": GravityScheduler,
     "least_loaded": LeastLoadedScheduler,
     "locality": LocalityAwareScheduler,
     "round_robin": RoundRobinScheduler,

@@ -62,6 +62,9 @@ class Message:
     reply_to: Optional[int] = None
     user: Optional[Dict[str, Any]] = None
     path: str = "host"         # 'host' (staged) | 'direct'
+    # receiver device the payload's consumer task will run on, when the
+    # sender knows it (consumer-routed delivery, ROADMAP follow-up d)
+    consumer_device: Optional[int] = None
 
 
 class Rank:
@@ -77,6 +80,9 @@ class Rank:
         self._out_lock = threading.Lock()
         self._pending_meta: Dict[int, Message] = {}
         self.objects: Dict[Any, HeteroObject] = {}   # global ptr -> object
+        # handler name -> local device id: where this rank wants payloads
+        # for that handler landed (consumer routing, set via route_to)
+        self.routes: Dict[str, int] = {}
         self.stats = {"sent": 0, "received": 0, "bytes_out": 0,
                       "bytes_d2d": 0, "bytes_staged": 0}
         self._stop = False
@@ -89,13 +95,17 @@ class Rank:
     # ------------------------------------------------------------------
     def send(self, dst: int, handler_name: str, obj: Optional[HeteroObject]
              = None, user: Optional[Dict[str, Any]] = None,
-             path: str = "host") -> HFuture:
+             path: str = "host",
+             consumer_device: Optional[int] = None) -> HFuture:
         """One-sided async handler invocation with optional hetero_object
-        payload. Returns a future completed when the message has been
-        handed to the network (not when the handler ran)."""
+        payload. ``consumer_device`` names the receiver device the payload's
+        consumer task will run on, when known — DIRECT payloads then land
+        there with a single transfer. Returns a future completed when the
+        message has been handed to the network (not when the handler ran)."""
         fut = HFuture()
         meta = Message(msg_id=next(_msg_ids), kind="meta", src=self.rank,
-                       dst=dst, handler=handler_name, user=user, path=path)
+                       dst=dst, handler=handler_name, user=user, path=path,
+                       consumer_device=consumer_device)
         if obj is None:
             self.cluster.deliver(meta)
             self.stats["sent"] += 1
@@ -156,6 +166,12 @@ class Rank:
     def register_object(self, key: Any, obj: HeteroObject) -> None:
         self.objects[key] = obj
 
+    def route_to(self, handler_name: str, device_id: int) -> None:
+        """Declare that payloads for ``handler_name`` will be consumed by
+        tasks on local ``device_id`` — incoming DIRECT payloads land there
+        directly instead of on the least-loaded fallback."""
+        self.routes[handler_name] = device_id
+
     # ------------------------------------------------------------------
     # pump
     # ------------------------------------------------------------------
@@ -215,7 +231,7 @@ class Rank:
             if meta is None:       # payload raced ahead of metadata
                 self._pending_meta[msg.msg_id] = msg
                 return
-            obj = self._adopt_payload(msg)
+            obj = self._adopt_payload(msg, meta)
             self._invoke(meta, obj)
         elif msg.kind == "put":
             self.stats["received"] += 1
@@ -233,12 +249,26 @@ class Rank:
             self.send(msg.src, msg.handler, src_obj,
                       user={"object_key": msg.object_key})
 
-    def _adopt_payload(self, msg: Message) -> HeteroObject:
+    def _landing_device(self, meta: Message) -> int:
+        """Consumer-routed delivery: the sender's per-message
+        ``consumer_device`` hint wins, then this rank's ``route_to``
+        registration for the handler, then the handler's declared
+        device-type affinity, and finally the residency ledger's
+        least-loaded device — never a hardwired device 0."""
+        ids = {d.info.device_id for d in self.runtime.devices}
+        pref = meta.consumer_device
+        if pref not in ids:      # absent or invalid hint: fall through
+            pref = self.routes.get(meta.handler)
+        return self.runtime.pick_landing_device(
+            preferred=pref, device_type=H.affinity(meta.handler))
+
+    def _adopt_payload(self, msg: Message, meta: Message) -> HeteroObject:
         """Land an incoming payload in the local runtime. DIRECT payloads
-        (device arrays) are moved with one Device API transfer onto this
-        rank's device — never staged through host (paper §3.2.3 Fig. 7)."""
+        (device arrays) are moved with one Device API transfer onto the
+        consumer task's device (falling back to least-loaded) — never
+        staged through host (paper §3.2.3 Fig. 7)."""
         if msg.path == "direct" and not isinstance(msg.payload, np.ndarray):
-            dst = self.runtime.devices[0]
+            dst = self.runtime._device(self._landing_device(meta))
             local = d2d_transfer(None, dst, msg.payload)
             self.stats["bytes_d2d"] += msg.payload.nbytes
             return self.runtime.adopt_device_array(local,

@@ -97,13 +97,24 @@ def rebalance_greedy(loads: Dict[int, float], owner: OwnerMap,
 
 class MobileObject:
     """A chunk of application data bound to an owner rank. Holds a
-    hetero_object on the owner; elsewhere it is just the pointer."""
+    hetero_object on the owner; elsewhere it is just the pointer.
+
+    ``meta["device"]`` (see ``device_hint``) records which of the owner's
+    devices consumes this chunk. Migration executors that ship a chunk's
+    data should pass it as ``Rank.send(..., consumer_device=...)`` so the
+    payload lands where the chunk's tasks will run instead of on the
+    landing fallback (wiring a built-in executor is a ROADMAP item)."""
 
     def __init__(self, ptr: Optional[MobilePtr] = None,
                  data: Any = None, meta: Optional[Dict[str, Any]] = None):
         self.ptr = ptr or MobilePtr(next(_ids))
         self.data = data            # HeteroObject on the owner rank
         self.meta = meta or {}
+
+    @property
+    def device_hint(self) -> Optional[int]:
+        """Consumer device id on the owner rank, if known."""
+        return self.meta.get("device")
 
     def __repr__(self):
         return f"MobileObject(oid={self.ptr.oid}, meta={self.meta})"

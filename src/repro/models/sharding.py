@@ -129,8 +129,11 @@ def _manual_axes() -> set:
         am = jax.sharding.get_abstract_mesh()
         return {n for n, t in zip(am.axis_names, am.axis_types)
                 if "Manual" in str(t)}
-    except Exception:   # pragma: no cover
-        return set()
+    except Exception:
+        # old jax: no abstract mesh — the compat shard_map shim records the
+        # manual axes in a thread-local while the body traces
+        import repro
+        return set(repro.compat_manual_axes())
 
 
 def constrain(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
@@ -141,6 +144,11 @@ def constrain(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
     spec = resolve_spec(logical_axes, shape=x.shape, mesh=mesh)
     manual = _manual_axes()
     if manual:
+        # old jax cannot apply constraints inside a partially-manual region
+        # at all (XLA trips an IsManualSubgroup check); constraints are
+        # advisory, so drop them there and let GSPMD pick layouts
+        if not hasattr(jax.sharding, "get_abstract_mesh"):
+            return x
         parts = []
         for p in spec:
             if p is None:
@@ -150,8 +158,8 @@ def constrain(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
                        if a not in manual)
             parts.append(ax[0] if len(ax) == 1 else (ax or None))
         spec = PS(*parts)
-        # inside a (partially) manual shard_map region the constraint must
-        # carry the abstract mesh, whose axis types mark the manual axes
+        # the constraint must carry the abstract mesh, whose axis types mark
+        # the manual axes
         return jax.lax.with_sharding_constraint(
             x, NamedSharding(jax.sharding.get_abstract_mesh(), spec))
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -9,7 +9,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-import repro
 from repro.train.compression import dequantize_int8, quantize_int8
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -27,13 +26,12 @@ def test_quantize_roundtrip_error_bounded(shape):
     assert float(jnp.max(err)) <= float(bound) + 1e-6
 
 
-@pytest.mark.skipif(
-    repro.COMPAT_SHARD_MAP,
-    reason="partial-manual shard_map (axis_names=) needs native "
-           "jax.shard_map; the compat alias cannot emulate it")
 def test_compressed_training_tracks_exact():
     """8 virtual devices, (pod=2, data=2, model=2): compressed-gradient
-    training must track exact training closely (error feedback)."""
+    training must track exact training closely (error feedback). Runs on
+    every jax: native partial-manual shard_map when available, else the
+    scan-over-pods compat formulation (same numerics, see
+    train_step._compressed_grads)."""
     code = """
         import jax, jax.numpy as jnp
         from repro.configs import get_smoke_config

@@ -124,6 +124,92 @@ def test_direct_send_survives_subsequent_donating_writer(cluster):
                                    err_msg=f"trial {trial}")
 
 
+@handler(name="test_keep")
+def _keep_handler(ctx, obj):
+    with _lock:
+        _received["kept"] = obj
+
+
+def test_direct_payload_lands_on_consumer_device(cluster):
+    """Consumer-routed delivery (ROADMAP follow-up d): a DIRECT payload
+    with a consumer_device hint must land on that device — not on the
+    historical hardwired device 0."""
+    rt1 = cluster.ranks[1].runtime
+    if len(rt1.devices) < 2:
+        pytest.skip("needs >= 2 (virtual) devices")
+    data = np.arange(4096, dtype=np.float32).reshape(64, 64)
+    rt0 = cluster.ranks[0].runtime
+    obj = rt0.hetero_object(data)
+    rt0.run(lambda v: v + 1.0, [(obj, "rw")])   # leaves a device-only copy
+    rt0.barrier()
+    cluster.ranks[0].send(1, "test_keep", obj, path="direct",
+                          consumer_device=1)
+    assert _wait_for(lambda: "kept" in _received)
+    landed = _received["kept"]
+    assert landed.resident_devices() == {1}, landed.valid_spaces()
+    np.testing.assert_allclose(landed.get(), data + 1.0)
+
+
+def test_direct_payload_route_to_registration(cluster):
+    """The receiver-side route_to(handler, device) registration routes
+    DIRECT payloads without any sender-side hint."""
+    rt1 = cluster.ranks[1].runtime
+    if len(rt1.devices) < 2:
+        pytest.skip("needs >= 2 (virtual) devices")
+    cluster.ranks[1].route_to("test_keep", 1)
+    try:
+        data = np.full((64, 64), 3.0, np.float32)
+        rt0 = cluster.ranks[0].runtime
+        obj = rt0.hetero_object(data)
+        rt0.run(lambda v: v * 2.0, [(obj, "rw")])
+        rt0.barrier()
+        cluster.ranks[0].send(1, "test_keep", obj, path="direct")
+        assert _wait_for(lambda: "kept" in _received)
+        assert _received["kept"].resident_devices() == {1}
+    finally:
+        cluster.ranks[1].routes.clear()
+
+
+def test_invalid_consumer_hint_falls_through_to_route(cluster):
+    """A consumer_device naming a nonexistent device must not shadow the
+    receiver's route_to registration (documented fall-through chain)."""
+    rt1 = cluster.ranks[1].runtime
+    if len(rt1.devices) < 2:
+        pytest.skip("needs >= 2 (virtual) devices")
+    cluster.ranks[1].route_to("test_keep", 1)
+    try:
+        data = np.full((64, 64), 5.0, np.float32)
+        rt0 = cluster.ranks[0].runtime
+        obj = rt0.hetero_object(data)
+        rt0.run(lambda v: v + 1.0, [(obj, "rw")])
+        rt0.barrier()
+        cluster.ranks[0].send(1, "test_keep", obj, path="direct",
+                              consumer_device=99)
+        assert _wait_for(lambda: "kept" in _received)
+        assert _received["kept"].resident_devices() == {1}
+    finally:
+        cluster.ranks[1].routes.clear()
+
+
+def test_direct_payload_fallback_is_least_loaded(cluster):
+    """With no consumer known, the landing device comes from the residency
+    ledger (least pressure, then fewest bytes resident) — loading device 0
+    with resident bytes must steer the payload to device 1."""
+    rt1 = cluster.ranks[1].runtime
+    if len(rt1.devices) < 2:
+        pytest.skip("needs >= 2 (virtual) devices")
+    ballast = rt1.hetero_object(np.ones((128, 128), np.float32))
+    rt1._ensure_on_device(ballast, 0, will_write=False)   # device 0 heavier
+    data = np.arange(1024, dtype=np.float32)
+    rt0 = cluster.ranks[0].runtime
+    obj = rt0.hetero_object(data)
+    rt0.run(lambda v: v + 1.0, [(obj, "rw")])
+    rt0.barrier()
+    cluster.ranks[0].send(1, "test_keep", obj, path="direct")
+    assert _wait_for(lambda: "kept" in _received)
+    assert _received["kept"].resident_devices() == {1}
+
+
 def test_direct_path_host_only_falls_back_to_staged(cluster):
     """A direct send of an object with no device copy degrades gracefully
     to the host-staged protocol."""

@@ -1,0 +1,109 @@
+"""Over-decomposition planner geometry (paper §4.4): chunk coverage,
+neighbour reciprocity, owner balance, and degenerate domains."""
+import numpy as np
+import pytest
+
+from repro.distributed.overdecomp import (microbatch_plan,
+                                          plan_decomposition)
+
+
+@pytest.mark.parametrize("domain,workers,od", [
+    ((32, 16, 16), 2, 2),
+    ((64, 8, 8), 4, 2),
+    ((16, 16), 4, 1),
+    ((24,), 3, 2),
+])
+def test_chunks_tile_domain_exactly(domain, workers, od):
+    plan = plan_decomposition(domain, workers, od)
+    assert len(plan.chunks) == workers * od
+    covered = np.zeros(domain, dtype=np.int32)
+    for c in plan.chunks:
+        sl = tuple(slice(lo, hi) for lo, hi in zip(c.lo, c.hi))
+        covered[sl] += 1
+        assert c.shape == tuple(h - l for l, h in zip(c.lo, c.hi))
+    # every cell covered exactly once — no gaps, no overlaps
+    assert (covered == 1).all()
+
+
+@pytest.mark.parametrize("domain,workers,od", [
+    ((32, 16, 16), 2, 2),
+    ((64, 8, 8), 4, 2),
+    ((24,), 3, 2),
+])
+def test_neighbor_reciprocity(domain, workers, od):
+    """If chunk A sees B across its hi-face of dim d, B must see A across
+    its lo-face of dim d — halo exchanges depend on this symmetry."""
+    plan = plan_decomposition(domain, workers, od)
+    for c in plan.chunks:
+        for tag, other in plan.neighbors(c.cid).items():
+            if other is None:
+                continue
+            opp = {"lo": "hi", "hi": "lo"}[tag[:2]] + tag[2]
+            assert plan.neighbors(other)[opp] == c.cid, (c.cid, tag, other)
+
+
+def test_neighbor_offsets_are_adjacent():
+    plan = plan_decomposition((32, 16, 16), 2, 2)
+    for c in plan.chunks:
+        for tag, other in plan.neighbors(c.cid).items():
+            if other is None:
+                continue
+            d = int(tag[2:])
+            o = plan.chunks[other]
+            diff = [a - b for a, b in zip(o.grid_pos, c.grid_pos)]
+            want = [0] * len(diff)
+            want[d] = -1 if tag.startswith("lo") else 1
+            assert diff == want, (c.grid_pos, tag, o.grid_pos)
+
+
+@pytest.mark.parametrize("workers,od", [
+    (2, 4), (4, 3), (3, 1), (16, 1), (2, 1),
+])
+def test_owner_of_is_balanced_and_monotone(workers, od):
+    """Block ownership: every worker owns exactly ``od`` chunks, ids are
+    assigned in contiguous monotone blocks, every owner is in range."""
+    n_chunks = workers * od
+    plan = plan_decomposition((n_chunks * 4,), workers, od)
+    owners = [plan.owner_of(c.cid) for c in plan.chunks]
+    counts = {r: owners.count(r) for r in range(workers)}
+    assert all(counts[r] == od for r in range(workers)), counts
+    assert owners == sorted(owners)          # contiguous blocks
+    assert all(0 <= r < workers for r in owners)
+
+
+def test_degenerate_single_worker_single_chunk():
+    plan = plan_decomposition((8, 8), n_workers=1, over_decomposition=1)
+    assert len(plan.chunks) == 1
+    c = plan.chunks[0]
+    assert c.lo == (0, 0) and c.hi == (8, 8)
+    assert all(v is None for v in plan.neighbors(0).values())
+    assert plan.owner_of(0) == 0
+
+
+def test_degenerate_single_worker_overdecomposed():
+    plan = plan_decomposition((16,), n_workers=1, over_decomposition=4)
+    assert len(plan.chunks) == 4
+    assert all(plan.owner_of(c.cid) == 0 for c in plan.chunks)
+    # interior chunks have both neighbours, boundary chunks one
+    n0 = plan.neighbors(0)
+    assert n0["lo0"] is None and n0["hi0"] == 1
+
+
+def test_grid_biases_larger_dims():
+    """The chunk grid splits the longest dims first — a 64×8×8 domain cut
+    into 8 chunks must not split the short dims below need."""
+    plan = plan_decomposition((64, 8, 8), 8, 1)
+    assert plan.chunk_grid[0] >= max(plan.chunk_grid[1:])
+    assert int(np.prod(plan.chunk_grid)) == 8
+
+
+def test_indivisible_domain_asserts():
+    with pytest.raises(AssertionError):
+        plan_decomposition((10,), n_workers=3, over_decomposition=1)
+
+
+def test_microbatch_plan_balance_and_divisibility():
+    assert microbatch_plan(256, 4) == [64, 64, 64, 64]
+    assert microbatch_plan(8, 1) == [8]
+    with pytest.raises(AssertionError):
+        microbatch_plan(10, 4)

@@ -1,0 +1,374 @@
+"""Residency & placement engine: ledger bookkeeping, data-gravity cost
+model (tie-breaking included), gravity scheduler re-keying, priority
+transfer queues, configurable prefetch depth, and the pooled D2H staging
+path.
+
+conftest.py forces a 2-device CPU view for the jax-backed tests; the
+prefetch-depth pipeline tests use a deterministic FakeDevice with
+configurable upload/compute latencies instead of racing real jax dispatch.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (HOST, DataGravityPolicy, HeteroObject, HeteroTask,
+                        LoadOnlyPolicy, ResidencyLedger, Runtime,
+                        RuntimeConfig)
+from repro.core.device_api import Device, DeviceInfo
+from repro.core.scheduler import GravityScheduler
+
+
+def _obj(nbytes_floats=16, spaces=()):
+    o = HeteroObject(None, value=np.zeros(nbytes_floats, np.float32))
+    for s in spaces:
+        o.copies[s] = o.copies[HOST]
+    return o
+
+
+def _task(*objs):
+    t = HeteroTask()
+    for o in objs:
+        t.arg(o).read()
+    return t
+
+
+# ---------------------------------------------------------------------------
+# ledger bookkeeping
+# ---------------------------------------------------------------------------
+
+def test_ledger_record_drop_and_gauges():
+    led = ResidencyLedger({0: 1 << 20, 1: 1 << 20})
+    a, b = _obj(256), _obj(64)
+    led.record(0, a)
+    led.record(0, b)
+    led.record(1, a)
+    assert led.devices_of(a) == {0, 1}
+    assert led.usage(0) == a.nbytes + b.nbytes
+    g = led.gauges()
+    assert g["bytes_resident"] == {0: a.nbytes + b.nbytes, 1: a.nbytes}
+    assert g["objects_resident"] == {0: 2, 1: 1}
+    led.drop(1, a)
+    assert led.devices_of(a) == {0}
+    led.drop(0, a)
+    assert led.devices_of(a) == set()
+    assert led.usage(0) == b.nbytes
+    # double record must not double count
+    led.record(0, b)
+    assert led.usage(0) == b.nbytes
+
+
+def test_ledger_task_byte_queries():
+    led = ResidencyLedger({0: 1 << 20, 1: 1 << 20})
+    a, b = _obj(256), _obj(64)
+    led.record(0, a)
+    t = _task(a, b, a)          # duplicate arg counted once
+    assert led.task_bytes_resident(t, 0) == a.nbytes
+    assert led.task_bytes_to_move(t, 0) == b.nbytes
+    assert led.task_bytes_resident(t, 1) == 0
+    assert led.task_bytes_to_move(t, 1) == a.nbytes + b.nbytes
+
+
+def test_ledger_lru_eviction_order():
+    led = ResidencyLedger({0: 1000})
+    objs = [_obj(64) for _ in range(3)]       # 256B each
+    for o in objs:
+        led.record(0, o)
+    led.touch(0, objs[0])                     # objs[1] is now the LRU
+    evicted = []
+
+    def evict(obj, dev):
+        evicted.append(obj)
+        led.drop(dev, obj)
+        return True
+
+    assert led.ensure_capacity(0, 500, evict)
+    assert evicted[0] is objs[1]
+    assert led.evictions >= 1
+
+
+def test_ledger_least_loaded_device():
+    led = ResidencyLedger({0: 1 << 20, 1: 1 << 20, 2: 1 << 20})
+    led.record(0, _obj(256))
+    # no pressure info: fewest bytes resident, lowest id breaks the tie
+    assert led.least_loaded_device() == 1
+    # pressure dominates residency
+    assert led.least_loaded_device(pressure={1: 5, 0: 0, 2: 3}.get) == 0
+    # restriction to a subset
+    assert led.least_loaded_device(among=[0, 2]) == 2
+
+
+# ---------------------------------------------------------------------------
+# placement cost model
+# ---------------------------------------------------------------------------
+
+def test_gravity_score_prefers_heavy_resident_bytes():
+    pol = DataGravityPolicy(load_penalty_bytes=1)
+    big, small = _obj(4096, spaces=[0]), _obj(16, spaces=[1])
+    t = _task(big, small)
+    # device 0 holds 16KB of the args, device 1 only 64B
+    assert pol.choose(t, [0, 1], lambda d: 0) == 0
+    # ...and the ledger-bound path agrees with the has_copy fallback
+    led = ResidencyLedger({0: 1 << 20, 1: 1 << 20})
+    led.record(0, big)
+    led.record(1, small)
+    pol.bind(led)
+    assert pol.choose(t, [0, 1], lambda d: 0) == 0
+
+
+def test_gravity_ties_break_deterministically_by_device_id():
+    pol = DataGravityPolicy()
+    t = _task(_obj(16))           # host-only arg: equal cost everywhere
+    assert pol.choose(t, [2, 1, 0], lambda d: 0) == 0
+    assert pol.choose(t, [2, 1], lambda d: 0) == 1
+
+
+def test_gravity_pressure_penalty_overrides_small_residency():
+    pol = DataGravityPolicy(load_penalty_bytes=1024)
+    o = _obj(16, spaces=[0])      # 64 bytes resident on device 0
+    t = _task(o)
+    # 64B of gravity loses to one queued task (1024B penalty) on device 0
+    assert pol.choose(t, [0, 1], {0: 1, 1: 0}.get) == 1
+    # megabyte-scale residency wins against the same pressure gap
+    heavy = _obj(1 << 18, spaces=[0])
+    assert pol.choose(_task(heavy), [0, 1], {0: 1, 1: 0}.get) == 0
+
+
+def test_load_only_policy_ignores_residency():
+    pol = LoadOnlyPolicy()
+    o = _obj(4096, spaces=[0])
+    assert pol.choose(_task(o), [0, 1], {0: 3, 1: 1}.get) == 1
+
+
+def test_gravity_scheduler_rekeys_queue_by_residency():
+    s = GravityScheduler({0: "cpu", 1: "cpu"})
+    o = _obj(1 << 16, spaces=[1])
+    t = _task(o)
+    s.push(t)
+    assert s.queued[1] == 1 and s.queued[0] == 0
+    # no stealing: device 0 cannot take the task placed with its data
+    assert s.pop(0) is None
+    got, dev = s.pop(1)
+    assert got is t and dev == 1
+
+
+def test_runtime_placement_override():
+    cfg = RuntimeConfig(memory_capacity=1 << 26, placement="load_only")
+    with Runtime(cfg) as rt:
+        assert isinstance(rt.scheduler.placement, LoadOnlyPolicy)
+        assert rt.scheduler.placement.ledger is rt.residency
+        x = rt.hetero_object(np.ones(8, np.float32))
+        rt.run(lambda v: v + 1, [(x, "rw")])
+        rt.barrier()
+        np.testing.assert_allclose(x.get(), 2.0)
+
+
+def test_gravity_keeps_tasks_with_their_weights():
+    """A stream of tasks each reading one of two resident megabyte-scale
+    weights must stay on the weights' devices — no bouncing."""
+    cfg = RuntimeConfig(memory_capacity=1 << 28)
+    with Runtime(cfg) as rt:
+        if len(rt.devices) < 2:
+            pytest.skip("needs >= 2 (virtual) devices")
+        w = [rt.hetero_object(np.ones((512, 512), np.float32))
+             for _ in range(2)]
+        rt._ensure_on_device(w[0], 0, will_write=False)
+        rt._ensure_on_device(w[1], 1, will_write=False)
+        h2d0 = rt.stats()["bytes_h2d"]
+        tasks = []
+        for i in range(12):
+            y = rt.hetero_object(shape=(512,), dtype=np.float32)
+            tasks.append((i % 2, rt.run(
+                lambda a, out: a[:, 0] * 2.0, [(w[i % 2], "r"), (y, "w")])))
+        rt.barrier()
+        for want_dev, t in tasks:
+            assert t.chosen_device == want_dev, \
+                (want_dev, t.chosen_device)
+        # the weights never moved again: the only new H2D traffic is the
+        # 2KB output buffers, far below one 1MB weight re-upload
+        s = rt.stats()
+        assert s["bytes_h2d"] - h2d0 < w[0].nbytes
+        assert s["bytes_d2d"] == 0
+
+
+# ---------------------------------------------------------------------------
+# priority transfer queues
+# ---------------------------------------------------------------------------
+
+def test_transfer_queue_orders_by_priority():
+    """While the transfer thread is busy, later-enqueued priority-1 work
+    must run before earlier-enqueued priority-2 staging."""
+    with Runtime(RuntimeConfig(memory_capacity=1 << 26)) as rt:
+        gate = threading.Event()
+        order = []
+        rt._async_transfer(0, gate.wait)          # occupy the thread
+        f_deep = rt._async_transfer(0, lambda: order.append("deep"),
+                                    priority=2)
+        f_next = rt._async_transfer(0, lambda: order.append("next"),
+                                    priority=1)
+        gate.set()
+        f_deep.get(5)
+        f_next.get(5)
+        assert order == ["next", "deep"], order
+
+
+# ---------------------------------------------------------------------------
+# prefetch depth (deterministic FakeDevice timing)
+# ---------------------------------------------------------------------------
+
+class _Handle:
+    __slots__ = ("value", "done_at")
+
+    def __init__(self, value, done_at):
+        self.value = value
+        self.done_at = done_at
+
+
+class FakeDevice(Device):
+    """Deterministic latencies: uploads sleep ``upload_s``; kernels carry a
+    ``compute_s`` attribute simulated as asynchronous completion time."""
+
+    def __init__(self, device_id=0, upload_s=0.0):
+        super().__init__(DeviceInfo(device_id, "cpu", 1 << 30, "fake"))
+        self.upload_s = upload_s
+
+    def upload(self, host_array):
+        if self.upload_s:
+            time.sleep(self.upload_s)
+        return np.array(host_array)
+
+    def download(self, dev_array):
+        return np.asarray(dev_array)
+
+    def transfer_from(self, src, dev_array):
+        return np.array(dev_array)
+
+    def launch(self, kernel, args, donate=()):
+        value = kernel(*args)
+        return _Handle(value, time.monotonic()
+                       + getattr(kernel, "compute_s", 0.0))
+
+    def synchronize(self, handle):
+        time.sleep(max(0.0, handle.done_at - time.monotonic()))
+        return handle
+
+    def is_ready(self, handle):
+        return time.monotonic() >= handle.done_at
+
+
+def _run_depth_pipeline(depth: int):
+    """Workload: [heavy-upload, light, light] × 4 on one device. A heavy
+    task's 60 ms upload overlaps one 40 ms compute at depth 1 (always a
+    20 ms stall) but two computes at depth 2 (done 20 ms early)."""
+    def light_kernel(v):
+        return float(v[0])
+    light_kernel.compute_s = 0.04
+
+    def heavy_kernel(v):
+        return float(v[0])
+    heavy_kernel.compute_s = 0.04
+
+    dev = FakeDevice(0, upload_s=0.06)
+    cfg = RuntimeConfig(memory_capacity=1 << 28, sync_dispatch=True,
+                        prefetch=True, prefetch_depth=depth)
+    with Runtime(cfg, devices=[dev]) as rt:
+        shared = rt.hetero_object(np.ones(4, np.float32))
+        rt._ensure_on_device(shared, 0, will_write=False)  # lights resident
+        for _ in range(4):
+            heavy = rt.hetero_object(np.ones(256, np.float32))
+            rt.run(heavy_kernel, [(heavy, "r")])
+            rt.run(light_kernel, [(shared, "r")])
+            rt.run(light_kernel, [(shared, "r")])
+        rt.barrier(timeout=60)
+        return rt.stats()
+
+
+def test_prefetch_depth2_overlaps_more_than_depth1():
+    s1 = _run_depth_pipeline(depth=1)
+    s2 = _run_depth_pipeline(depth=2)
+    # depth 1 cannot hide a 60ms upload behind one 40ms compute: the heavy
+    # staging always stalls. depth 2 stages it two computes ahead.
+    assert s2["prefetch_hits"] > s1["prefetch_hits"], (s1, s2)
+    assert s1["prefetch_stalls"] >= 2, s1
+    assert s2["prefetch_hits"] >= 2, s2
+
+
+# ---------------------------------------------------------------------------
+# pooled D2H staging path
+# ---------------------------------------------------------------------------
+
+def test_download_stages_into_pool_no_aliasing():
+    """The host copy of a device-written object must be a pooled private
+    buffer, never a zero-copy view of the device buffer (which donation
+    could recycle underneath it)."""
+    with Runtime(RuntimeConfig(memory_capacity=1 << 28)) as rt:
+        x = rt.hetero_object(np.arange(1024, dtype=np.float32))
+        rt.run(lambda v: v + 1.0, [(x, "rw")])
+        rt.barrier()
+        fut = x.request_host(write=False)
+        host = fut.get(5)
+        try:
+            with x.lock:
+                dev_sp = next(s for s in x.copies if s != HOST)
+                dev_view = np.asarray(x.copies[dev_sp])
+            assert not np.may_share_memory(host, dev_view)
+            assert getattr(x, "_pooled_host", False)
+        finally:
+            x.release()
+        np.testing.assert_allclose(x.get(), np.arange(1024) + 1.0)
+
+
+def test_download_buffers_recycle_through_pool():
+    """Invalidation of a staged host copy must return the pool buffer:
+    repeated write→read cycles hit the staging pool."""
+    with Runtime(RuntimeConfig(memory_capacity=1 << 28)) as rt:
+        x = rt.hetero_object(np.zeros((64, 64), np.float32))
+        for i in range(4):
+            rt.run(lambda v: v + 1.0, [(x, "rw")])   # invalidates host copy
+            rt.barrier()
+            np.testing.assert_allclose(x.get(), float(i + 1))
+        assert rt.staging.hits > 0, rt.stats()
+
+
+def test_pooled_host_buffer_recycles_after_pinned_drop():
+    """Regression: dropping a pooled HOST copy while a pin still hands the
+    buffer out (request → free → release) must not strand the buffer —
+    release() returns it to the pool."""
+    with Runtime(RuntimeConfig(memory_capacity=1 << 28)) as rt:
+        x = rt.hetero_object(shape=(32, 32), dtype=np.float32)
+        rt.run(lambda v: v + 1.0, [(x, "w")])
+        rt.barrier()
+        fut = x.request_host(write=False)     # pooled D2H staging
+        fut.get(5)
+        assert getattr(x, "_pooled_host", False)
+        x.free()                              # drops HOST while pinned
+        hits0 = rt.staging.hits
+        x.release()                           # last pin: buffer → pool
+        rt.staging.acquire((32, 32), np.float32)
+        assert rt.staging.hits == hits0 + 1
+
+
+def test_chunked_download_bit_exact():
+    with Runtime(RuntimeConfig(memory_capacity=1 << 28,
+                               staging_chunk_bytes=1 << 10)) as rt:
+        data = np.random.default_rng(7).random((64, 64)).astype(np.float32)
+        x = rt.hetero_object(data.copy())
+        rt.run(lambda v: v * 3.0, [(x, "rw")])
+        rt.barrier()
+        np.testing.assert_allclose(x.get(), data * 3.0, rtol=1e-6)
+        assert rt.stats()["transfers_d2h"] >= 1
+
+
+def test_stats_surface_pool_and_residency_gauges():
+    with Runtime(RuntimeConfig(memory_capacity=1 << 28)) as rt:
+        x = rt.hetero_object(np.ones((32, 32), np.float32))
+        rt.run(lambda v: v * 2.0, [(x, "rw")])
+        rt.barrier()
+        s = rt.stats()
+        for key in ("staging_hits", "staging_misses", "request_pool_hits",
+                    "request_pool_misses", "bytes_resident",
+                    "objects_resident", "evictions", "prefetch_stalls"):
+            assert key in s, key
+        assert sum(s["bytes_resident"].values()) >= x.nbytes
+        assert x.resident_devices() <= set(s["bytes_resident"])

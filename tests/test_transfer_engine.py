@@ -125,6 +125,10 @@ def test_coherence_after_mixed_d2d_and_host_writes():
 # ---------------------------------------------------------------------------
 
 def test_prefetch_pipeline_counts_hits_and_recycles_futures():
+    """Every staged argument copy is accounted either as a hit (transfer
+    completed during the previous task's compute) or a stall (claimed
+    early but still awaited) — the pipeline must have engaged for this
+    workload of non-resident arguments."""
     with _two_device_rt(prefetch=True) as rt:
         objs = [rt.hetero_object(np.ones((64, 64), np.float32))
                 for _ in range(30)]
@@ -132,7 +136,7 @@ def test_prefetch_pipeline_counts_hits_and_recycles_futures():
             rt.run(lambda v: (v @ v.T).astype(v.dtype), [(o, "rw")])
         rt.barrier()
         s = rt.stats()
-        assert s["prefetch_hits"] > 0, s
+        assert s["prefetch_hits"] + s["prefetch_stalls"] > 0, s
         # consumed transfer futures must return to the request pool
         assert len(rt.futures._free) > 0
         for o in objs:
@@ -147,6 +151,7 @@ def test_prefetch_disabled_counts_nothing():
         rt.barrier()
         s = rt.stats()
         assert s["prefetch_hits"] == 0
+        assert s["prefetch_stalls"] == 0
         assert s["prefetch_misses"] == 0
         np.testing.assert_allclose(x.get(), 6.0)
 
