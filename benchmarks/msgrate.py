@@ -1,0 +1,167 @@
+"""Paper §4.2 — message-protocol crossover sweep (Fig. 10–12 analogue).
+
+Per message size, measures the wall-clock from ``Rank.send`` on rank 0 to
+*device-resident delivery* on rank 1 (the paper's definition of a useful
+message: the payload is where the consumer task runs), for two protocol
+configurations on the same simulated network:
+
+  mono   eager_threshold = ∞ — every payload travels as one monolithic
+         blob through a single staging hop (the pre-protocol-split path);
+         the receiver then uploads the whole payload to its device.
+  pipe   the protocol split: payloads ≤ eager_threshold travel eagerly
+         (identical to mono), larger ones chunk-stream through the
+         rendezvous protocol with each chunk uploaded to the landing
+         device while the next is still on the network.
+
+The expected curve is the paper's crossover: small messages identical
+(within noise — the eager path IS the monolithic path), large messages
+faster under pipe because device upload hides behind network receive.
+
+Chunk size defaults to the bandwidth-delay product measured by the
+cluster's InterconnectModel (refined by the warmup sends); pass
+``--chunk-kb`` to pin it.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import RuntimeConfig
+from repro.distributed import Cluster, handler
+
+_delivered = threading.Event()
+_count_lock = threading.Lock()
+_count = 0
+_target = 1
+
+
+@handler(name="msgrate_sink")
+def _sink(ctx, obj):
+    # force device residency: rendezvous payloads already live there,
+    # monolithic host payloads pay their upload here — the fair endpoint
+    global _count
+    rt = ctx.rank.runtime
+    rt._ensure_on_device(obj, rt.pick_landing_device(), will_write=False)
+    with _count_lock:
+        _count += 1
+        if _count >= _target:
+            _delivered.set()
+
+
+def _one_batch(cluster: Cluster, nbytes: int, count: int) -> float:
+    """Time ``count`` back-to-back deliveries; returns seconds per
+    message. Small messages are batched so per-call scheduler jitter
+    (±0.5 ms on a busy box) amortizes below the effect being measured."""
+    global _count, _target
+    n = max(nbytes // 4, 1)
+    objs = [cluster.ranks[0].runtime.hetero_object(
+        np.ones((n,), np.float32)) for _ in range(count)]
+    with _count_lock:
+        _count, _target = 0, count
+    _delivered.clear()
+    t0 = time.perf_counter()
+    for obj in objs:
+        cluster.ranks[0].send(1, "msgrate_sink", obj)
+    if not _delivered.wait(120):
+        raise TimeoutError(f"delivery timeout at {nbytes}B")
+    return (time.perf_counter() - t0) / count
+
+
+def _batch_count(nbytes: int) -> int:
+    return max(1, min(64, (256 << 10) // max(nbytes, 1)))
+
+
+SIZES = (1 << 10, 8 << 10, 64 << 10, 256 << 10, 1 << 20, 4 << 20, 8 << 20)
+
+
+def run(sizes=SIZES, iters: int = 10, latency_s: float = 30e-6,
+        bw_bytes_per_s: float = 1e9, eager_threshold: int = 64 << 10,
+        chunk_bytes: Optional[int] = None) -> List[Dict]:
+    rows: List[Dict] = []
+    # ONE cluster serves both modes: the protocol decision reads
+    # cfg.eager_threshold at flush time, so flipping it between sends
+    # A/B-tests mono vs pipe on identical threads, identical topology
+    # state, identical caches — the only variable is the protocol
+    cfg = RuntimeConfig(memory_capacity=1 << 30,
+                        eager_threshold=eager_threshold,
+                        chunk_bytes=chunk_bytes)
+    with Cluster(2, cfg, latency_s=latency_s,
+                 bw_bytes_per_s=bw_bytes_per_s) as cluster:
+        r1 = cluster.ranks[1]
+
+        def timed(nb: int, mono: bool) -> float:
+            cfg.eager_threshold = (1 << 62) if mono else eager_threshold
+            return _one_batch(cluster, nb, _batch_count(nb))
+
+        for _ in range(2):               # compile + seed the bw estimate
+            timed(1 << 20, mono=True)
+            timed(1 << 20, mono=False)
+        for nb in sizes:
+            timed(nb, mono=True)         # per-size shape warmup
+            timed(nb, mono=False)
+            chunks0 = r1.stats["chunks_in"]
+            overlap0 = r1.stats["overlap_bytes"]
+            mono_lat, pipe_lat = [], []
+            for i in range(iters):
+                # alternate which mode goes first so any first-of-pair
+                # effect (cache state, thread wakeup) cancels out
+                if i % 2 == 0:
+                    mono_lat.append(timed(nb, mono=True))
+                    pipe_lat.append(timed(nb, mono=False))
+                else:
+                    pipe_lat.append(timed(nb, mono=False))
+                    mono_lat.append(timed(nb, mono=True))
+            mono_us = float(np.median(mono_lat)) * 1e6
+            pipe_us = float(np.median(pipe_lat)) * 1e6
+            rows.append({
+                "bytes": nb,
+                "protocol": "eager" if nb <= eager_threshold else "rdzv",
+                "mono_us": round(mono_us, 1),
+                "pipe_us": round(pipe_us, 1),
+                "speedup": round(mono_us / pipe_us, 4),
+                "chunks": (r1.stats["chunks_in"] - chunks0)
+                / (iters * _batch_count(nb)),
+                "overlap_bytes": (r1.stats["overlap_bytes"] - overlap0)
+                / (iters * _batch_count(nb)),
+            })
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", default=None,
+                    help="comma-separated payload bytes")
+    ap.add_argument("--iters", type=int, default=10)
+    ap.add_argument("--latency-us", type=float, default=30.0)
+    ap.add_argument("--bw-gbps", type=float, default=1.0,
+                    help="simulated network bandwidth, GB/s")
+    ap.add_argument("--eager-kb", type=int, default=64)
+    ap.add_argument("--chunk-kb", type=int, default=None,
+                    help="pin the rendezvous chunk size (default: "
+                         "bandwidth-delay product from the measured link)")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+    sizes = tuple(int(s) for s in args.sizes.split(",")) if args.sizes \
+        else SIZES
+    rows = run(sizes=sizes, iters=args.iters,
+               latency_s=args.latency_us * 1e-6,
+               bw_bytes_per_s=args.bw_gbps * 1e9,
+               eager_threshold=args.eager_kb << 10,
+               chunk_bytes=(args.chunk_kb << 10) if args.chunk_kb else None)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"msgrate_mono_{r['bytes']},{r['mono_us']:.1f},")
+        print(f"msgrate_pipe_{r['bytes']},{r['pipe_us']:.1f},"
+              f"{r['protocol']}_x{r['speedup']:.3f}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,12 +1,19 @@
 """Jacobi3D proxy application (paper §4.3–4.4).
 
-Three execution modes on the same numerics:
+Four execution modes on the same numerics:
 
   run_reference   — single-array jnp oracle
   run_tasked      — PREMA-style: the domain is over-decomposed into mobile
                     chunks executed as hetero_tasks with implicit
                     dependencies; halo exchange = put operations; compute and
                     halo traffic of different chunks overlap (paper Fig. 14)
+  run_cluster     — distributed proxy on the message engine: slabs are
+                    scattered over ranks through ``Rank.send`` (large slabs
+                    ride the chunk-streamed rendezvous protocol), halo
+                    planes travel as eager ``Rank.put`` operations into
+                    preregistered halo objects, and the result is gathered
+                    back through the same protocol — the paper's §4.3
+                    distributed Jacobi on the topology-aware pipeline.
   run_spmd        — production path: shard_map over a mesh axis with
                     ppermute halo exchange — the compiled TPU analogue;
                     ``bulk_sync=True`` emulates the MPI+CUDA baseline
@@ -19,6 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import threading
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -28,6 +36,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
 
 from repro.core import HeteroTask, Runtime
 from repro.distributed.collectives import halo_exchange_1d
+from repro.distributed.handlers import handler
 from repro.distributed.overdecomp import DecompPlan, plan_decomposition
 
 
@@ -135,6 +144,132 @@ def run_tasked(u0: np.ndarray, iters: int, runtime: Runtime,
     for c in plan.chunks:
         out[c.lo[0]:c.hi[0], c.lo[1]:c.hi[1], c.lo[2]:c.hi[2]] = \
             chunks[c.cid].get()
+    return out
+
+
+# ---------------------------------------------------------------------------
+# distributed version on the message engine (paper §4.3)
+# ---------------------------------------------------------------------------
+# handler-side state lives on the Rank objects themselves (one driver
+# thread coordinates; handlers only deposit data and trip events)
+
+@handler(name="jacobi_slab")
+def _recv_slab(ctx, obj):
+    st = ctx.rank._jacobi
+    st["slab"] = obj
+    st["slab_evt"].set()
+
+
+@handler(name="jacobi_halo_done")
+def _halo_done(ctx, obj):
+    st = ctx.rank._jacobi
+    with st["lock"]:
+        st["halos"] += 1
+        if st["halos"] >= st["halos_expected"]:
+            st["halo_evt"].set()
+
+
+@handler(name="jacobi_gather")
+def _recv_gather(ctx, obj):
+    st = ctx.rank._jacobi
+    with st["lock"]:
+        st["gathered"][ctx.message.user["part"]] = obj
+        if len(st["gathered"]) >= st["gather_expected"]:
+            st["gather_evt"].set()
+
+
+def _slab_bounds(n: int, parts: int) -> List[Tuple[int, int]]:
+    return [(p * n // parts, (p + 1) * n // parts) for p in range(parts)]
+
+
+def run_cluster(u0: np.ndarray, iters: int, cluster) -> np.ndarray:
+    """Distributed Jacobi over ``cluster``'s ranks: axis-0 slab
+    decomposition, scatter/gather through ``Rank.send`` (rendezvous for
+    slabs above the eager threshold), per-iteration halo planes through
+    eager ``Rank.put`` into preregistered halo objects."""
+    ranks = cluster.ranks
+    n = len(ranks)
+    bounds = _slab_bounds(u0.shape[0], n)
+    for i, r in enumerate(ranks):
+        r._jacobi = {
+            "lock": threading.Lock(), "slab": None,
+            "slab_evt": threading.Event(), "halos": 0,
+            "halos_expected": (1 if i > 0 else 0) + (1 if i < n - 1 else 0),
+            "halo_evt": threading.Event(),
+            "gathered": {}, "gather_expected": n - 1,
+            "gather_evt": threading.Event(),
+        }
+    # scatter: rank 0 owns u0; remote slabs travel the message protocol
+    for i, (lo, hi) in enumerate(bounds):
+        part = np.ascontiguousarray(u0[lo:hi])
+        if i == 0:
+            ranks[0]._jacobi["slab"] = ranks[0].runtime.hetero_object(part)
+        else:
+            src = ranks[0].runtime.hetero_object(part)
+            ranks[0].send(i, "jacobi_slab", src)
+    for i in range(1, n):
+        assert ranks[i]._jacobi["slab_evt"].wait(60), f"scatter to {i}"
+
+    # per-rank halo objects + frozen zero faces for the untouched dims
+    zeros = {}
+    for i, r in enumerate(ranks):
+        s = r._jacobi["slab"].shape
+        rt = r.runtime
+        r.register_object("jlo", rt.hetero_object(
+            np.zeros((s[1], s[2]), u0.dtype)))
+        r.register_object("jhi", rt.hetero_object(
+            np.zeros((s[1], s[2]), u0.dtype)))
+        zeros[i] = (rt.hetero_object(np.zeros((s[0], s[2]), u0.dtype)),
+                    rt.hetero_object(np.zeros((s[0], s[1]), u0.dtype)))
+
+    def lo_face(u, out):
+        return u[0]
+
+    def hi_face(u, out):
+        return u[-1]
+
+    def update(u, l0, h0, z1, z2):
+        return stencil_update(u, l0, h0, z1, z1, z2, z2)
+
+    for _ in range(iters):
+        for r in ranks:
+            r._jacobi["halos"] = 0
+            r._jacobi["halo_evt"].clear()
+        # extract boundary planes + put them into the neighbours' halos
+        for i, r in enumerate(ranks):
+            rt, slab = r.runtime, r._jacobi["slab"]
+            s = slab.shape
+            if i > 0:
+                f = rt.hetero_object(shape=(s[1], s[2]), dtype=u0.dtype)
+                rt.run(lo_face, [(slab, "r"), (f, "w")])
+                r.put(i - 1, "jhi", f, on_done="jacobi_halo_done")
+            if i < n - 1:
+                f = rt.hetero_object(shape=(s[1], s[2]), dtype=u0.dtype)
+                rt.run(hi_face, [(slab, "r"), (f, "w")])
+                r.put(i + 1, "jlo", f, on_done="jacobi_halo_done")
+        for r in ranks:
+            if r._jacobi["halos_expected"]:
+                assert r._jacobi["halo_evt"].wait(60), "halo exchange"
+        # update each slab from its (now current) halo objects
+        for i, r in enumerate(ranks):
+            rt, slab = r.runtime, r._jacobi["slab"]
+            z1, z2 = zeros[i]
+            rt.run(update, [(slab, "rw"), (r.objects["jlo"], "r"),
+                            (r.objects["jhi"], "r"), (z1, "r"), (z2, "r")])
+        for r in ranks:
+            r.runtime.barrier(timeout=120)
+
+    # gather back to rank 0 through the protocol
+    for i in range(1, n):
+        ranks[i].send(0, "jacobi_gather", ranks[i]._jacobi["slab"],
+                      user={"part": i})
+    if n > 1:
+        assert ranks[0]._jacobi["gather_evt"].wait(60), "gather"
+    out = np.empty_like(u0)
+    out[bounds[0][0]:bounds[0][1]] = ranks[0]._jacobi["slab"].get()
+    for i in range(1, n):
+        lo, hi = bounds[i]
+        out[lo:hi] = ranks[0]._jacobi["gathered"][i].get()
     return out
 
 

@@ -12,6 +12,8 @@ from repro.core.residency import (PLACEMENTS, DataGravityPolicy,  # noqa: F401
                                   LoadOnlyPolicy, PlacementPolicy,
                                   ResidencyLedger)
 from repro.core.runtime import Runtime, RuntimeConfig  # noqa: F401
+from repro.core.topology import (InterconnectModel,  # noqa: F401
+                                 LinkEstimate, probe_runtime_links)
 from repro.core.scheduler import (SCHEDULERS, FifoScheduler,  # noqa: F401
                                   GravityScheduler, LeastLoadedScheduler,
                                   LocalityAwareScheduler, RoundRobinScheduler,

@@ -17,10 +17,15 @@ from __future__ import annotations
 import abc
 import dataclasses
 import threading
+import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+# pseudo-device id for transfer sources not wrapped locally (a payload
+# arriving from another rank's runtime) in interconnect observations
+FOREIGN = -2
 
 
 @dataclasses.dataclass
@@ -103,15 +108,31 @@ class Device(abc.ABC):
 
 
 def transfer(src_dev: Optional[Device], dst_dev: Device,
-             dev_array: Any) -> Any:
+             dev_array: Any,
+             observer: Optional[Callable[[int, int, int, float], None]]
+             = None) -> Any:
     """Direct D2D copy: move ``dev_array`` from ``src_dev`` to ``dst_dev``
     with no host bounce. The single entry point every layer above (core
     runtime coherence walk, distributed DIRECT payload path) routes through.
     ``src_dev`` may be None when the source device is not wrapped locally
-    (e.g. a payload arriving from another rank's runtime)."""
+    (e.g. a payload arriving from another rank's runtime) — such sources
+    are reported as ``FOREIGN``.
+
+    ``observer(src_id, dst_id, nbytes, seconds)`` is the interconnect
+    stats hook: every caller that owns an ``InterconnectModel`` passes
+    its ``observe`` so the one primitive feeds all topology estimates.
+    On asynchronously-dispatching backends the sample reflects dispatch +
+    enqueue (a lower bound the EWMA smooths)."""
     if src_dev is not None and src_dev.info.device_id == dst_dev.info.device_id:
         return dev_array
-    return dst_dev.transfer_from(src_dev, dev_array)
+    t0 = time.perf_counter() if observer is not None else 0.0
+    out = dst_dev.transfer_from(src_dev, dev_array)
+    if observer is not None:
+        src_id = src_dev.info.device_id if src_dev is not None else FOREIGN
+        observer(src_id, dst_dev.info.device_id,
+                 int(getattr(dev_array, "nbytes", 0)),
+                 time.perf_counter() - t0)
+    return out
 
 
 class JaxDevice(Device):

@@ -46,8 +46,14 @@ class ResidencyLedger:
 
     ``record``/``drop``/``touch`` are called by the runtime wherever a
     device copy is created, invalidated, or reused; everything else reads.
-    Pin state lives on the objects (host/device pins guard eviction and
-    donation) and is consulted through ``obj.busy()`` at eviction time.
+
+    Pin ownership lives HERE (ROADMAP follow-up c): the runtime pins an
+    object while any task, host access, or device view holds it
+    (``pin``/``unpin``), and eviction skips pinned replicas by consulting
+    the ledger alone — no ``obj.busy()`` walk, no object locks on the
+    eviction path. ``version`` ticks on every replica change so placement
+    decisions can detect staleness (the scheduler re-scores aged
+    ready-queue entries on pop when the version moved).
     """
 
     def __init__(self, capacities: Dict[int, int]):
@@ -58,8 +64,13 @@ class ResidencyLedger:
             d: collections.OrderedDict() for d in capacities}
         # id(obj) -> set of devices holding a valid replica
         self._where: Dict[int, Set[int]] = {}
+        # id(obj) -> pin count; pinned objects are never evicted. The
+        # pinner always holds a strong reference for the pin's lifetime,
+        # so a recycled id() cannot alias a live pin.
+        self._pins: Dict[int, int] = {}
         self._lock = threading.RLock()
         self.evictions = 0
+        self.version = 0          # bumped on every record/drop
 
     # -- replica bookkeeping -------------------------------------------
     def record(self, device_id: int, obj, nbytes: Optional[int] = None
@@ -70,6 +81,7 @@ class ResidencyLedger:
             if id(obj) not in lru:
                 self._usage[device_id] += nb
                 lru[id(obj)] = _Entry(obj, nb)
+                self.version += 1
             else:
                 lru[id(obj)].last_touch = next(_touch_clock)
             lru.move_to_end(id(obj))
@@ -80,11 +92,31 @@ class ResidencyLedger:
         with self._lock:
             if self._lru[device_id].pop(id(obj), None) is not None:
                 self._usage[device_id] -= nb
+                self.version += 1
             devs = self._where.get(id(obj))
             if devs is not None:
                 devs.discard(device_id)
                 if not devs:
                     del self._where[id(obj)]
+
+    # -- pin ownership (eviction guard) --------------------------------
+    def pin(self, obj) -> None:
+        """Mark ``obj`` in active use (task argument, host access, device
+        view): its replicas are skipped by eviction until ``unpin``."""
+        with self._lock:
+            self._pins[id(obj)] = self._pins.get(id(obj), 0) + 1
+
+    def unpin(self, obj) -> None:
+        with self._lock:
+            n = self._pins.get(id(obj), 0) - 1
+            if n <= 0:
+                self._pins.pop(id(obj), None)
+            else:
+                self._pins[id(obj)] = n
+
+    def pinned(self, obj) -> bool:
+        with self._lock:
+            return self._pins.get(id(obj), 0) > 0
 
     def touch(self, device_id: int, obj) -> None:
         with self._lock:
@@ -159,7 +191,11 @@ class ResidencyLedger:
         with self._lock:
             if self._usage[device_id] + nbytes <= self._cap[device_id]:
                 return True
-            candidates = [e.obj for e in self._lru[device_id].values()]
+            # pinned replicas never leave the candidate list — the whole
+            # point of ledger-owned pins: no per-object lock or busy()
+            # walk on the eviction path
+            candidates = [e.obj for e in self._lru[device_id].values()
+                          if self._pins.get(id(e.obj), 0) == 0]
         for obj in candidates:
             if self._usage[device_id] + nbytes <= self._cap[device_id]:
                 return True
@@ -176,6 +212,7 @@ class ResidencyLedger:
                 "objects_resident": {d: len(lru)
                                      for d, lru in self._lru.items()},
                 "evictions": self.evictions,
+                "pinned_objects": len(self._pins),
             }
 
 
@@ -186,13 +223,19 @@ class ResidencyLedger:
 class PlacementPolicy(abc.ABC):
     """Scores candidate devices for a task; lower is better. A ledger is
     bound by the runtime (``bind``); unbound policies fall back to the
-    object-level ``has_copy`` walk so schedulers remain usable standalone."""
+    object-level ``has_copy`` walk so schedulers remain usable standalone.
+    The runtime also binds its ``InterconnectModel`` (``bind_topology``)
+    so cost models can price data movement in measured link terms."""
 
     def __init__(self):
         self.ledger: Optional[ResidencyLedger] = None
+        self.topology = None      # Optional[InterconnectModel]
 
     def bind(self, ledger: ResidencyLedger) -> None:
         self.ledger = ledger
+
+    def bind_topology(self, model) -> None:
+        self.topology = model
 
     def _bytes_split(self, task, device_id: int) -> Tuple[int, int]:
         """(bytes_resident, bytes_to_move) for the task on device_id."""
@@ -225,15 +268,45 @@ class DataGravityPolicy(PlacementPolicy):
     """The paper's data-locality placement as a cost model: prefer the
     device needing the fewest argument bytes copied in and holding the most
     already, with queue pressure converted to bytes so load still balances
-    when residency ties (``load_penalty_bytes`` per queued/running task)."""
+    when residency ties.
 
-    def __init__(self, load_penalty_bytes: int = 256 << 10):
+    The pressure penalty is DERIVED from the interconnect model when one
+    is bound (ROADMAP follow-up b): one queued task costs
+    ``penalty_seconds`` of that device's measured host→device bandwidth,
+    so a fast link tolerates more queueing before work migrates off its
+    data and a slow link sheds load sooner. ``load_penalty_bytes`` is only
+    the standalone fallback when no topology is bound."""
+
+    def __init__(self, load_penalty_bytes: int = 256 << 10,
+                 penalty_seconds: float = 50e-6):
         super().__init__()
         self.load_penalty = load_penalty_bytes
+        self.penalty_seconds = penalty_seconds
+
+    def penalty_bytes(self, device_id: int) -> int:
+        """Byte cost of one queued/running task on ``device_id``."""
+        if self.topology is None:
+            return self.load_penalty
+        from repro.core.hetero_object import HOST
+        return self.topology.penalty_bytes(HOST, device_id,
+                                           self.penalty_seconds)
+
+    def transfer_cost_s(self, task, device_id: int) -> float:
+        """Predicted seconds the coherence walk would spend staging the
+        task's missing argument bytes onto ``device_id`` — the scheduler's
+        transfer-cost estimate, surfaced for diagnostics and tests."""
+        _, move = self._bytes_split(task, device_id)
+        if not move:
+            return 0.0
+        if self.topology is None:
+            from repro.core.topology import LinkEstimate
+            return LinkEstimate().cost_s(move)    # default-link fallback
+        from repro.core.hetero_object import HOST
+        return self.topology.cost_s(HOST, device_id, move)
 
     def score(self, task, device_id: int, pressure: int) -> float:
         res, move = self._bytes_split(task, device_id)
-        return move - res + pressure * self.load_penalty
+        return move - res + pressure * self.penalty_bytes(device_id)
 
 
 class LoadOnlyPolicy(PlacementPolicy):

@@ -89,6 +89,7 @@ from repro.core.hetero_task import HeteroTask, TaskState
 from repro.core.memory import RequestPool, StagingPool
 from repro.core.residency import PLACEMENTS, ResidencyLedger
 from repro.core.scheduler import SCHEDULERS, Scheduler
+from repro.core.topology import InterconnectModel, probe_runtime_links
 
 
 @dataclasses.dataclass
@@ -108,6 +109,18 @@ class RuntimeConfig:
     memory_capacity: Optional[int] = None
     staging_chunk_bytes: int = 8 << 20   # chunk host uploads above this size
     poll_interval_s: float = 0.0005
+    # -- interconnect topology / message protocol (paper §3.2.3 + §4.2) --
+    topology_probe: bool = True   # startup micro-probe seeds the model
+    topology_probe_bytes: int = 64 << 10
+    # distributed messages above this size switch from the eager
+    # (monolithic) protocol to chunk-streamed rendezvous
+    eager_threshold: int = 64 << 10
+    # rendezvous chunk size targets this many ms per chunk at the
+    # measured link bandwidth (bandwidth-delay-product sizing; several ms
+    # per chunk keeps fixed per-chunk dispatch cost amortized);
+    # chunk_bytes pins an explicit size instead (tests/benchmarks)
+    chunk_target_ms: float = 4.0
+    chunk_bytes: Optional[int] = None
 
 
 class Runtime:
@@ -121,11 +134,20 @@ class Runtime:
                 d.cache_jit = self.cfg.cache_jit
         self.residency = ResidencyLedger(
             {d.info.device_id: d.info.memory_capacity for d in self.devices})
+        # measured per-link bandwidth/latency (paper §3.2.3): seeded by a
+        # startup micro-probe, refined by every real transfer below, and
+        # consumed by the gravity penalty, the scheduler's transfer-cost
+        # estimates, and the distributed message protocol's chunk sizing
+        self.topology = InterconnectModel()
         self.scheduler: Scheduler = SCHEDULERS[self.cfg.scheduler](
             {d.info.device_id: d.info.device_type for d in self.devices})
         if self.cfg.placement is not None:
             self.scheduler.placement = PLACEMENTS[self.cfg.placement]()
         self.scheduler.bind_residency(self.residency)
+        self.scheduler.bind_topology(self.topology)
+        if self.cfg.topology_probe:
+            probe_runtime_links(self.topology, self.devices,
+                                self.cfg.topology_probe_bytes)
         self.staging = StagingPool(self.cfg.staging_pool)
         self.futures = RequestPool(HFuture, self.cfg.request_pool)
         self._lock = threading.RLock()
@@ -166,6 +188,25 @@ class Runtime:
             self.residency.record(device_id, obj)
         return obj
 
+    def rebind_device_copy(self, obj: HeteroObject, dev_array: Any,
+                           device_id: int,
+                           timeout: Optional[float] = 120.0) -> None:
+        """Overwrite ``obj`` with an array already resident on
+        ``device_id`` — the device half of the distributed put (paper
+        §4.2.4): once conflicting writers retire, every existing copy is
+        invalidated and the new device array becomes the only valid one.
+        No host staging on either side."""
+        with self._lock:
+            lw = obj.last_writer
+        if lw is not None and not lw.done():
+            lw.future.get(timeout)
+        self.residency.ensure_capacity(device_id, obj.nbytes, self._evict)
+        with obj.lock:
+            for sp in list(obj.copies):
+                self._drop_copy(obj, sp)
+            obj.copies[device_id] = dev_array
+            self.residency.record(device_id, obj)
+
     def pick_landing_device(self, preferred: Optional[int] = None,
                             device_type: Optional[str] = None) -> int:
         """Where should externally-arriving data (a distributed DIRECT
@@ -193,6 +234,11 @@ class Runtime:
             task.state = TaskState.SUBMITTED
             self._tasks_pending += 1
             self._stats["tasks"] += 1
+            # ledger-owned pins: every argument is protected from
+            # eviction for the task's whole submitted→finished window
+            # (the busy() object-lock walk the eviction path used to do)
+            for obj in {id(r.obj): r.obj for r in task.args}.values():
+                self.residency.pin(obj)
             n = dep.infer_dependencies(task)
             if n > 0:
                 task.state = TaskState.BLOCKED
@@ -232,6 +278,7 @@ class Runtime:
         s["request_pool_hits"] = self.futures.hits
         s["request_pool_misses"] = self.futures.misses
         s.update(self.residency.gauges())
+        s["topology"] = self.topology.snapshot()
         return s
 
     def shutdown(self) -> None:
@@ -254,6 +301,7 @@ class Runtime:
     # host access protocol
     # ------------------------------------------------------------------
     def _request_host(self, obj: HeteroObject, write: bool) -> HFuture:
+        self.residency.pin(obj)      # until _release_host
         fut = self.futures.acquire()
 
         def deliver():
@@ -295,6 +343,7 @@ class Runtime:
         later donation can delete the payload mid-flight."""
         with obj.lock:
             obj.device_pins += 1
+        self.residency.pin(obj)      # until _release_device_view
         fut = self.futures.acquire()
 
         def deliver():
@@ -323,6 +372,7 @@ class Runtime:
         return fut
 
     def _release_host(self, obj: HeteroObject) -> None:
+        self.residency.unpin(obj)
         with obj.lock:
             obj.host_pins = max(0, obj.host_pins - 1)
             # a pooled buffer whose HOST copy was dropped while pinned
@@ -334,6 +384,7 @@ class Runtime:
                 obj._orphan_host = None
 
     def _release_device_view(self, obj: HeteroObject) -> None:
+        self.residency.unpin(obj)
         with obj.lock:
             obj.device_pins = max(0, obj.device_pins - 1)
 
@@ -375,7 +426,10 @@ class Runtime:
             pooled = True
         else:
             dev_arr = obj.copies[src]
+            t0 = time.perf_counter()
             arr, pooled = self._download_device(self._device(src), dev_arr)
+            self.topology.observe(src, HOST, obj.nbytes,
+                                  time.perf_counter() - t0)
             self._stats["transfers_d2h"] += 1
             self._stats["bytes_d2h"] += obj.nbytes
         with obj.lock:
@@ -415,7 +469,17 @@ class Runtime:
     def _upload_host(self, device: Device, host_arr: np.ndarray) -> Any:
         """Host→device copy; large arrays stream through pooled staging
         buffers in ``staging_chunk_bytes`` pieces (page-locked pool
-        analogue) so one giant transfer can't monopolize host memory."""
+        analogue) so one giant transfer can't monopolize host memory.
+        Every upload is timed into the interconnect model (the chunked
+        path blocks, so its sample is honest; the simple path measures
+        dispatch+copy, which the EWMA smooths)."""
+        t0 = time.perf_counter()
+        arr = self._upload_host_inner(device, host_arr)
+        self.topology.observe(HOST, device.info.device_id,
+                              host_arr.nbytes, time.perf_counter() - t0)
+        return arr
+
+    def _upload_host_inner(self, device: Device, host_arr: np.ndarray) -> Any:
         chunk = self.cfg.staging_chunk_bytes
         if (not self.staging.enabled or chunk <= 0
                 or host_arr.nbytes <= chunk or host_arr.ndim == 0
@@ -441,8 +505,11 @@ class Runtime:
         return jnp.concatenate(pieces, axis=0)
 
     def _evict(self, obj: HeteroObject, device_id: int) -> bool:
-        """LRU eviction callback: spill to host unless busy (paper §3.1.1)."""
-        if obj.busy():
+        """LRU eviction callback: spill to host unless pinned (paper
+        §3.1.1). Pin state is the ledger's — no obj.busy() lock walk;
+        ``ensure_capacity`` already filters pinned candidates, this check
+        only covers direct callers and pins taken mid-eviction."""
+        if self.residency.pinned(obj):
             return False
         with obj.lock:
             if device_id not in obj.copies:
@@ -484,7 +551,8 @@ class Runtime:
             self.residency.ensure_capacity(device_id, obj.nbytes,
                                            self._evict)
             dev_arr = device_api.transfer(self._device(src_dev),
-                                          self._device(device_id), src_arr)
+                                          self._device(device_id), src_arr,
+                                          observer=self.topology.observe)
             self._stats["transfers_d2d"] += 1
             self._stats["bytes_d2d"] += obj.nbytes
         else:
@@ -717,6 +785,8 @@ class Runtime:
         return handle
 
     def _finish(self, task: HeteroTask, result=None, error=None):
+        for obj in {id(r.obj): r.obj for r in task.args}.values():
+            self.residency.unpin(obj)
         with self._lock:
             if error is not None:
                 task.state = TaskState.FAILED

@@ -54,6 +54,12 @@ class Scheduler(abc.ABC):
         if self.placement is not None:
             self.placement.bind(ledger)
 
+    def bind_topology(self, model) -> None:
+        """Hand the runtime's InterconnectModel to the placement cost
+        model so transfer costs are priced from measured bandwidth."""
+        if self.placement is not None:
+            self.placement.bind_topology(model)
+
     @abc.abstractmethod
     def push(self, task: HeteroTask) -> None: ...
 
@@ -96,6 +102,14 @@ class IndexedScheduler(Scheduler):
     """
 
     steals = True
+    # re-score the head of a ready queue at pop time when residency moved
+    # since it was placed (ROADMAP follow-up a: placement is decided at
+    # push time and can be stale once replicas shifted). Only locality
+    # policies opt in — for load-only policies staleness is meaningless.
+    rescore_on_pop = False
+    # bound work per pop: at most this many stale heads are re-homed
+    # before falling through to the normal pop path
+    _RESCORE_LIMIT = 4
 
     def __init__(self, device_types: Dict[int, str],
                  placement: Optional[PlacementPolicy] = None):
@@ -118,6 +132,10 @@ class IndexedScheduler(Scheduler):
     def _pressure(self, dev: int) -> int:
         return self.load[dev] + self.queued[dev]
 
+    def _ledger_version(self) -> Optional[int]:
+        led = self.placement.ledger if self.placement is not None else None
+        return led.version if led is not None else None
+
     # queue mechanics -------------------------------------------------------
     def push(self, task: HeteroTask) -> None:
         with self._lock:
@@ -125,8 +143,34 @@ class IndexedScheduler(Scheduler):
             if dev is None:
                 self._overflow.append(task)
             else:
+                task._placement_version = self._ledger_version()
                 self._ready[dev].append(task)
                 self.queued[dev] += 1
+
+    def _rescore_head(self, device_hint: int) -> None:
+        """Aged-entry repair (ROADMAP follow-up a): if residency changed
+        since the head of this device's queue was placed, score it again
+        and re-home it to the new best device's queue. Bounded so a pop
+        stays O(1)-ish; the re-homed task keeps its FIFO position at the
+        tail of the winner's queue (its placement is the freshest)."""
+        version = self._ledger_version()
+        if version is None:
+            return
+        q = self._ready[device_hint]
+        for _ in range(self._RESCORE_LIMIT):
+            if not q:
+                return
+            head = q[0]
+            if getattr(head, "_placement_version", None) == version:
+                return
+            head._placement_version = version
+            best = self._place(head)
+            if best is None or best == device_hint:
+                return
+            q.popleft()
+            self.queued[device_hint] -= 1
+            self._ready[best].append(head)
+            self.queued[best] += 1
 
     def _take_overflow(self, device_hint: int) -> Optional[HeteroTask]:
         # O(1) when the head is eligible (the common, untyped-task case);
@@ -154,6 +198,8 @@ class IndexedScheduler(Scheduler):
             ) -> Optional[Tuple[HeteroTask, int]]:
         with self._lock:
             if device_hint is not None:
+                if self.rescore_on_pop:
+                    self._rescore_head(device_hint)
                 q = self._ready[device_hint]
                 if q:
                     self.queued[device_hint] -= 1
@@ -250,9 +296,11 @@ class GravityScheduler(IndexedScheduler):
     by the placement cost model's best device — bytes-to-move minus
     bytes-resident plus pressure, answered by the runtime's residency
     ledger. No stealing: a stolen task pays exactly the transfers the
-    placement avoided."""
+    placement avoided. Aged entries are re-scored at pop time when the
+    ledger moved underneath them (push-time placement can be stale)."""
 
     steals = False
+    rescore_on_pop = True
 
     def __init__(self, device_types,
                  placement: Optional[PlacementPolicy] = None):

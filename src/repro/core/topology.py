@@ -1,0 +1,209 @@
+"""Interconnect topology model (paper §3.2.3 + §4.2).
+
+The paper's message engine adapts its protocol to the link it is using:
+small messages go eagerly, large ones are pipelined in chunks sized so
+that network receive and device copy overlap. Both decisions need the
+same thing — a per-link estimate of bandwidth and latency — and so does
+the scheduler's transfer-cost model (ROADMAP follow-up b: the gravity
+penalty must come from measured bandwidth, not a fixed byte constant).
+
+``InterconnectModel`` is that single estimate. Endpoints are integers:
+``HOST`` (-1) for host memory, device ids inside one runtime, or rank ids
+when the distributed ``Cluster`` models its network. Every estimate is a
+``LinkEstimate`` holding exponentially-weighted moving averages of
+bandwidth and latency, seeded by a cheap startup micro-probe
+(``Runtime`` with ``topology_probe=True``) and refined online by
+``observe`` calls from every real transfer the runtime performs. The
+model is deliberately clock-free: callers pass ``(nbytes, seconds)``
+samples, so tests can drive it deterministically.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional, Tuple
+
+# defaults before any sample arrives: a conservative PCIe-gen3-ish link.
+DEFAULT_BANDWIDTH = 8e9          # bytes/s
+DEFAULT_LATENCY = 20e-6          # seconds
+# samples shorter than this are treated as latency measurements; the
+# bandwidth term of such a transfer is noise (dispatch dominates).
+_LATENCY_SAMPLE_BYTES = 4 << 10
+_MIN_SECONDS = 1e-9
+
+
+class LinkEstimate:
+    """EWMA bandwidth/latency for one directed (src, dst) link.
+    Latency and bandwidth first-samples are tracked separately: a link
+    whose first traffic is small (latency-only) messages must still have
+    its first REAL bandwidth sample replace the default outright, not be
+    blended 3:1 with the guess."""
+
+    __slots__ = ("bandwidth", "latency", "samples", "bw_samples",
+                 "lat_samples", "chunk_choice")
+
+    def __init__(self, bandwidth: float = DEFAULT_BANDWIDTH,
+                 latency: float = DEFAULT_LATENCY):
+        self.bandwidth = bandwidth
+        self.latency = latency
+        self.samples = 0          # total observations (either kind)
+        self.bw_samples = 0
+        self.lat_samples = 0
+        # sticky chunk-size choice per (target_s, lo, hi) — see
+        # InterconnectModel.chunk_bytes hysteresis
+        self.chunk_choice: Dict[Tuple[float, int, int], int] = {}
+
+    def cost_s(self, nbytes: int) -> float:
+        """Predicted transfer time: latency + nbytes / bandwidth."""
+        return self.latency + nbytes / max(self.bandwidth, 1.0)
+
+
+class InterconnectModel:
+    """Directed-link bandwidth/latency estimates with EWMA refinement.
+
+    ``alpha`` weights new samples; the first sample replaces the default
+    outright (a measured number always beats the guess).
+    """
+
+    def __init__(self, alpha: float = 0.25,
+                 default_bandwidth: float = DEFAULT_BANDWIDTH,
+                 default_latency: float = DEFAULT_LATENCY):
+        self.alpha = alpha
+        self._default_bw = default_bandwidth
+        self._default_lat = default_latency
+        self._links: Dict[Tuple[int, int], LinkEstimate] = {}
+        self._lock = threading.Lock()
+
+    def _link(self, src: int, dst: int) -> LinkEstimate:
+        key = (src, dst)
+        est = self._links.get(key)
+        if est is None:
+            est = LinkEstimate(self._default_bw, self._default_lat)
+            self._links[key] = est
+        return est
+
+    # -- refinement ----------------------------------------------------
+    def observe(self, src: int, dst: int, nbytes: int,
+                seconds: float) -> None:
+        """Fold one real transfer into the (src → dst) estimate. Tiny
+        transfers update latency (their duration is dispatch-dominated);
+        larger ones update bandwidth after subtracting the current
+        latency estimate."""
+        seconds = max(seconds, _MIN_SECONDS)
+        with self._lock:
+            est = self._link(src, dst)
+            if nbytes <= _LATENCY_SAMPLE_BYTES:
+                a = self.alpha if est.lat_samples else 1.0
+                est.latency = (1 - a) * est.latency + a * seconds
+                est.lat_samples += 1
+            else:
+                a = self.alpha if est.bw_samples else 1.0
+                payload_s = max(seconds - est.latency, _MIN_SECONDS)
+                bw = nbytes / payload_s
+                est.bandwidth = (1 - a) * est.bandwidth + a * bw
+                est.bw_samples += 1
+            est.samples += 1
+
+    # -- queries -------------------------------------------------------
+    def bandwidth(self, src: int, dst: int) -> float:
+        with self._lock:
+            return self._link(src, dst).bandwidth
+
+    def latency(self, src: int, dst: int) -> float:
+        with self._lock:
+            return self._link(src, dst).latency
+
+    def samples(self, src: int, dst: int) -> int:
+        with self._lock:
+            est = self._links.get((src, dst))
+            return est.samples if est is not None else 0
+
+    def cost_s(self, src: int, dst: int, nbytes: int) -> float:
+        """Predicted seconds to move ``nbytes`` over (src → dst) — the
+        scheduler's transfer-cost estimate."""
+        with self._lock:
+            return self._link(src, dst).cost_s(nbytes)
+
+    def chunk_bytes(self, src: int, dst: int, target_s: float,
+                    lo: int = 64 << 10, hi: int = 8 << 20) -> int:
+        """Pipeline chunk size for (src → dst): the bandwidth-delay
+        product at ``target_s`` per chunk, clamped to [lo, hi] so a wild
+        estimate can neither devolve into per-byte messages nor disable
+        pipelining outright. QUANTIZED to a power of two with hysteresis:
+        the EWMA drifts a little on every sample, and an un-quantized (or
+        boundary-flapping) size would give messages fresh chunk shapes —
+        defeating jit/transfer caches keyed on shapes (XLA recompiles per
+        shape signature). The stored choice only moves once the raw
+        bandwidth-delay product leaves a ~2.7× band around it."""
+        import math
+        with self._lock:
+            est = self._link(src, dst)
+            raw = min(max(est.bandwidth * target_s, lo), hi)
+            key = (target_s, lo, hi)
+            prev = est.chunk_choice.get(key)
+            if prev is not None and prev / 2.66 <= raw <= prev * 2.66:
+                return prev
+            q = 1 << max(round(math.log2(raw)), 0)  # nearest power of two
+            q = min(max(q, lo), hi)
+            est.chunk_choice[key] = q
+            return q
+
+    def penalty_bytes(self, src: int, dst: int, seconds: float,
+                      lo: int = 64 << 10, hi: int = 1 << 20) -> int:
+        """Byte-equivalent of ``seconds`` of queueing on the (src → dst)
+        link — how the gravity placement converts queue pressure into the
+        byte space its score lives in (clamped: a degenerate bandwidth
+        estimate must not swamp or erase real residency)."""
+        with self._lock:
+            bw = self._link(src, dst).bandwidth
+        return int(min(max(bw * seconds, lo), hi))
+
+    def snapshot(self) -> Dict[str, Dict[str, float]]:
+        """Stats view: ``{"src->dst": {bw_MBps, lat_us, samples}}``."""
+        with self._lock:
+            return {
+                f"{src}->{dst}": {
+                    "bw_MBps": round(e.bandwidth / 1e6, 3),
+                    "lat_us": round(e.latency * 1e6, 3),
+                    "samples": e.samples,
+                }
+                for (src, dst), e in sorted(self._links.items())
+            }
+
+
+def probe_runtime_links(model: InterconnectModel, devices,
+                        nbytes: int = 64 << 10) -> None:
+    """Cheap startup micro-probe: one ``nbytes`` upload per device (host →
+    device) and one ring hop per adjacent device pair (device → device,
+    both directions), each timed and folded into ``model``. Ring, not
+    all-pairs: the probe must stay O(n) so runtimes with many devices
+    start fast; online refinement fills in the rest."""
+    import time
+
+    import numpy as np
+
+    from repro.core.hetero_object import HOST
+
+    payload = np.ones(max(nbytes // 4, 1), np.float32)
+    staged = {}
+    for dev in devices:
+        t0 = time.perf_counter()
+        arr = dev.upload(payload)
+        if hasattr(arr, "block_until_ready"):
+            arr.block_until_ready()
+        model.observe(HOST, dev.info.device_id, payload.nbytes,
+                      time.perf_counter() - t0)
+        staged[dev.info.device_id] = arr
+    n = len(devices)
+    seen = set()
+    for i in range(n if n > 1 else 0):
+        src, dst = devices[i], devices[(i + 1) % n]
+        for a, b in ((src, dst), (dst, src)):
+            if (a.info.device_id, b.info.device_id) in seen:
+                continue
+            seen.add((a.info.device_id, b.info.device_id))
+            t0 = time.perf_counter()
+            moved = b.transfer_from(a, staged[a.info.device_id])
+            if hasattr(moved, "block_until_ready"):
+                moved.block_until_ready()
+            model.observe(a.info.device_id, b.info.device_id,
+                          payload.nbytes, time.perf_counter() - t0)

@@ -20,8 +20,26 @@ so no staging copy is needed), the payload travels as that device array, and
 the receiver lands it with one Device API ``transfer`` onto its own device —
 no host copy is materialized on either side. Per-path traffic is accounted
 in ``Rank.stats`` (``bytes_d2d`` vs ``bytes_staged``).
-Small messages (≤512B) inline the payload in the metadata message
-(§4.2.3). On a real TPU pod the network step lowers to ICI collectives
+
+Protocol split (paper §4.2.2–§4.2.3): payloads at or below
+``RuntimeConfig.eager_threshold`` travel EAGERLY — one metadata message
+plus one monolithic payload message, with ≤512B payloads inlined in the
+metadata. Larger payloads switch to a RENDEZVOUS protocol: the sender
+announces the message (RTS), the receiver prepares a consumer-routed
+landing device and replies ready (CTS), and the sender then streams the
+payload in chunks sized from the measured bandwidth-delay product of the
+rank pair (``Cluster.topology``, refined from every delivery). Each
+arriving chunk is handed straight to the landing device's transfer queue,
+so the network receive of chunk k+1 overlaps the device upload of chunk k
+— the pipelining that lets large messages beat the monolithic path.
+Host-staged chunks travel through pooled staging buffers that return to
+the sender's pool once the receiver's upload completes (the RDMA
+buffer-recycle analogue). ``Rank.stats`` records ``eager``/``rendezvous``
+message counts, ``chunks_out``/``chunks_in``, and ``overlap_bytes`` —
+chunk uploads that had fully completed before the last chunk arrived,
+i.e. copies hidden entirely behind the network.
+
+On a real TPU pod the network step lowers to ICI collectives
 (see distributed/collectives.py); this layer is the host-side control plane
 and the single-node multi-device execution engine.
 """
@@ -40,17 +58,42 @@ from repro.core import HeteroObject, Runtime, RuntimeConfig
 from repro.core.device_api import transfer as d2d_transfer
 from repro.core.futures import HFuture
 from repro.core.hetero_object import HOST
+from repro.core.topology import InterconnectModel
 from repro.distributed import handlers as H
 
 INLINE_PAYLOAD_BYTES = 512
+# rendezvous chunk-size clamp: the bandwidth-delay product drives the
+# size, but a degenerate estimate must not collapse to per-byte messages
+# or a single unpipelined chunk
+MIN_CHUNK_BYTES = 64 << 10
+MAX_CHUNK_BYTES = 4 << 20
 _msg_ids = itertools.count()
 _FLUSH = object()            # pump wake-up sentinel (not a Message)
+
+_slab_updater_fn = None
+
+
+def _slab_updater():
+    """Jitted donated scatter: write a chunk into the landing slab at an
+    element offset, reusing the slab's buffer (donation) so the per-chunk
+    cost is chunk-sized, never slab-sized. One compilation per
+    (slab, chunk) shape pair — chunk sizes are power-of-two quantized
+    (InterconnectModel.chunk_bytes) precisely so this cache hits."""
+    global _slab_updater_fn
+    if _slab_updater_fn is None:
+        import jax
+        _slab_updater_fn = jax.jit(
+            lambda slab, chunk, off:
+            jax.lax.dynamic_update_slice(slab, chunk, (off,)),
+            donate_argnums=0)
+    return _slab_updater_fn
 
 
 @dataclasses.dataclass
 class Message:
     msg_id: int
-    kind: str                  # 'meta' | 'payload' | 'put' | 'get' | 'ack'
+    # 'meta' | 'payload' | 'cts' | 'chunk' | 'put' | 'get' | 'ack'
+    kind: str
     src: int
     dst: int
     handler: Optional[str] = None
@@ -65,6 +108,12 @@ class Message:
     # receiver device the payload's consumer task will run on, when the
     # sender knows it (consumer-routed delivery, ROADMAP follow-up d)
     consumer_device: Optional[int] = None
+    # -- rendezvous protocol fields --
+    protocol: str = "eager"    # 'eager' | 'rdzv'
+    seq: Optional[int] = None  # chunk index within a rendezvous stream
+    offset: Optional[int] = None   # chunk start, in elements
+    nchunks: Optional[int] = None
+    total_bytes: Optional[int] = None
 
 
 class Rank:
@@ -79,12 +128,25 @@ class Rank:
         self.outgoing: List[Tuple[HFuture, Message, HeteroObject]] = []
         self._out_lock = threading.Lock()
         self._pending_meta: Dict[int, Message] = {}
+        # rendezvous bookkeeping: outgoing payloads parked until CTS,
+        # in-progress incoming reassembly state per msg_id, and streamed
+        # pool buffers awaiting the receiver's completion ack
+        self._rdzv_out: Dict[int, Tuple[Message, Any, int, bool]] = {}
+        self._rdzv_in: Dict[int, Dict[str, Any]] = {}
+        self._rdzv_bufs: Dict[int, np.ndarray] = {}
+        # True while the pump is mid-flush or mid-handler: work extracted
+        # from the queues but not yet re-registered anywhere the barrier
+        # can see (closes the idle-looking window between popping a
+        # message/send and its effects landing)
+        self._active = False
         self.objects: Dict[Any, HeteroObject] = {}   # global ptr -> object
         # handler name -> local device id: where this rank wants payloads
         # for that handler landed (consumer routing, set via route_to)
         self.routes: Dict[str, int] = {}
         self.stats = {"sent": 0, "received": 0, "bytes_out": 0,
-                      "bytes_d2d": 0, "bytes_staged": 0}
+                      "bytes_d2d": 0, "bytes_staged": 0,
+                      "eager": 0, "rendezvous": 0,
+                      "chunks_out": 0, "chunks_in": 0, "overlap_bytes": 0}
         self._stop = False
         self._thread = threading.Thread(target=self._pump, daemon=True,
                                         name=f"prema-rank{rank}")
@@ -132,18 +194,34 @@ class Rank:
         return fut
 
     def put(self, dst: int, object_key: Any, data: HeteroObject,
-            on_done: Optional[str] = None) -> HFuture:
+            on_done: Optional[str] = None, path: str = "host",
+            consumer_device: Optional[int] = None) -> HFuture:
         """Remote put: overwrite the target's hetero_object (paper §4.2.4:
-        reuses existing, pinned target memory — no receiver allocation)."""
+        reuses existing, pinned target memory — no receiver allocation).
+        ``path='direct'`` ships the freshest device copy with no host
+        staging on either side (consumer-routed: the payload lands on
+        ``consumer_device``, else a device already holding the target)."""
         fut = HFuture()
-        access = data.request_host(write=False)
+        if path == "direct":
+            access = self.runtime._request_device_view(data)
+        else:
+            access = data.request_host(write=False)
 
         def on_ready(_):
-            arr = np.array(access.get())
-            data.release()
+            used_path = path
+            if path == "direct":
+                space, arr = access.get()
+                if space == HOST:          # no device copy: degrade
+                    used_path = "host"
+            else:
+                arr = np.array(access.get())
+                data.release()
             msg = Message(msg_id=next(_msg_ids), kind="put", src=self.rank,
                           dst=dst, object_key=object_key, payload=arr,
-                          handler=on_done)
+                          handler=on_done, path=used_path,
+                          consumer_device=consumer_device)
+            key = "bytes_d2d" if used_path == "direct" else "bytes_staged"
+            self.stats[key] += arr.nbytes
             self.cluster.deliver(msg)
             self.stats["sent"] += 1
             self.stats["bytes_out"] += arr.nbytes
@@ -152,12 +230,18 @@ class Rank:
         access.add_done_callback(on_ready)
         return fut
 
-    def get(self, dst: int, object_key: Any, handler_name: str) -> HFuture:
-        """Remote get: ask ``dst`` for object data; handler runs locally with
-        the received hetero_object."""
+    def get(self, dst: int, object_key: Any, handler_name: str,
+            path: str = "host",
+            consumer_device: Optional[int] = None) -> HFuture:
+        """Remote get: ask ``dst`` for object data; handler runs locally
+        with the received hetero_object. ``path``/``consumer_device``
+        shape the REPLY: a direct reply travels device-to-device and
+        lands consumer-routed on this rank (large replies chunk-stream
+        through the rendezvous protocol like any other send)."""
         fut = HFuture()
         msg = Message(msg_id=next(_msg_ids), kind="get", src=self.rank,
-                      dst=dst, object_key=object_key, handler=handler_name)
+                      dst=dst, object_key=object_key, handler=handler_name,
+                      path=path, consumer_device=consumer_device)
         self.cluster.deliver(msg)
         self.stats["sent"] += 1
         fut.set_result(None)
@@ -181,27 +265,45 @@ class Rank:
             still = []
             for access, meta, obj in self.outgoing:
                 if access.done():
+                    self._active = True   # visible before outgoing shrinks
                     ready.append((access, meta, obj))
                 else:
                     still.append((access, meta, obj))
             self.outgoing = still
         for access, meta, obj in ready:
+            pooled = False
             if meta.path == "direct":
                 # device-aware interconnect (§3.2.3 Fig. 7): the NIC reads
                 # device memory directly — the payload stays a device array
                 space, arr = access.get()   # arr: private on-device clone
                 if space == HOST:
                     # no device copy existed; fall back to the staged path
+                    # (arr is already a private host copy)
                     meta.path = "host"
             else:
-                # host-staged (§3.2.3 Fig. 6): explicit staging copy
-                arr = np.array(access.get())
+                # host-staged (§3.2.3 Fig. 6): ONE staging copy. A payload
+                # bound for the rendezvous protocol stages into a pooled
+                # buffer — chunks are zero-copy windows into it (the NIC
+                # reads the pinned buffer directly), and the buffer
+                # returns to the pool on the receiver's completion ack
+                src = np.asarray(access.get())
+                rdzv = src.nbytes > self.runtime.cfg.eager_threshold
+                if rdzv and self.runtime.staging.enabled:
+                    arr = self.runtime.staging.acquire(src.shape, src.dtype)
+                    np.copyto(arr, src)
+                    pooled = True
+                else:
+                    arr = np.array(src)
                 obj.release()
             nbytes = arr.nbytes
             if meta.path == "direct":
                 self.stats["bytes_d2d"] += nbytes
             else:
                 self.stats["bytes_staged"] += nbytes
+            if nbytes > self.runtime.cfg.eager_threshold:
+                self._start_rendezvous(meta, arr, nbytes, pooled)
+                continue
+            self.stats["eager"] += 1
             if meta.path != "direct" and nbytes <= INLINE_PAYLOAD_BYTES:
                 meta.inline = np.asarray(arr).tobytes()  # §4.2.3 small msgs
                 self.cluster.deliver(meta)
@@ -214,11 +316,163 @@ class Rank:
             self.stats["sent"] += 1
             self.stats["bytes_out"] += nbytes
 
+    # -- rendezvous protocol (sender side) -----------------------------
+    def _start_rendezvous(self, meta: Message, arr: Any, nbytes: int,
+                          pooled: bool = False) -> None:
+        """RTS: announce the message, park the payload until the receiver
+        signals CTS. Chunk size comes from the measured bandwidth-delay
+        product of this rank pair (``Cluster.topology``). ``pooled`` marks
+        a host payload staged in a StagingPool buffer — it is recycled
+        when the receiver acks stream completion."""
+        chunk_b = self.runtime.cfg.chunk_bytes
+        if chunk_b is None:
+            target_s = self.runtime.cfg.chunk_target_ms / 1e3
+            chunk_b = self.cluster.topology.chunk_bytes(
+                self.rank, meta.dst, target_s,
+                lo=MIN_CHUNK_BYTES, hi=MAX_CHUNK_BYTES)
+        itemsize = np.dtype(meta.payload_dtype).itemsize
+        elems = max(chunk_b // itemsize, 1)
+        total_elems = nbytes // itemsize
+        meta.protocol = "rdzv"
+        meta.nchunks = max((total_elems + elems - 1) // elems, 1)
+        meta.total_bytes = nbytes
+        self._rdzv_out[meta.msg_id] = (meta, arr, elems, pooled)
+        self.stats["rendezvous"] += 1
+        self.stats["sent"] += 1
+        self.cluster.deliver(meta)
+
+    def _stream_chunks(self, msg_id: int) -> None:
+        """CTS received: stream the parked payload in chunks — zero-copy
+        windows into the staged (pooled) host buffer, or on-device slices
+        for DIRECT payloads. The staged buffer itself stays parked until
+        the receiver's completion ack returns it to the pool."""
+        meta, arr, elems, pooled = self._rdzv_out.pop(msg_id)
+        flat = arr.reshape(-1)
+        if pooled:
+            self._rdzv_bufs[msg_id] = arr
+        for k in range(meta.nchunks):
+            piece = flat[k * elems:(k + 1) * elems]
+            chunk = Message(msg_id=msg_id, kind="chunk", src=self.rank,
+                            dst=meta.dst, seq=k, offset=k * elems,
+                            nchunks=meta.nchunks, payload=piece,
+                            path=meta.path)
+            self.stats["chunks_out"] += 1
+            self.stats["bytes_out"] += piece.nbytes
+            self.cluster.deliver(chunk)
+
+    # -- rendezvous protocol (receiver side) ---------------------------
+    def _prepare_rendezvous(self, meta: Message) -> None:
+        """RTS received: pick the consumer-routed landing device, start
+        allocating the flat landing slab ON that device (the allocation
+        overlaps the CTS round-trip and the first chunk's network time),
+        and signal CTS."""
+        dev = self._landing_device(meta)
+        rt = self.runtime
+        state = {
+            "meta": meta,
+            "dev": dev,
+            "uploads": {},           # seq -> (chunk-landed future, nbytes)
+            "arrived": 0,
+            "slab": None,            # device slab, chained through chunks
+        }
+        device = rt._device(dev)
+        if meta.nchunks > 1 and getattr(device, "jax_device", None) \
+                is not None:
+            total = meta.total_bytes // np.dtype(meta.payload_dtype).itemsize
+
+            def init(device=device, total=total,
+                     dtype=meta.payload_dtype):
+                import jax
+                import jax.numpy as jnp
+                with jax.default_device(device.jax_device):
+                    state["slab"] = jnp.zeros(total, dtype=np.dtype(dtype))
+            # FIFO transfer queue: the init lands before any chunk update
+            rt._async_transfer(dev, init)
+        self._rdzv_in[meta.msg_id] = state
+        self.cluster.deliver(Message(msg_id=meta.msg_id, kind="cts",
+                                     src=self.rank, dst=meta.src))
+
+    def _receive_chunk(self, msg: Message) -> None:
+        """One chunk arrived (possibly out of order): hand it straight to
+        the landing device's transfer queue and return to the pump — the
+        next chunk's network receive overlaps this chunk's device copy.
+        Each chunk is scattered into the preallocated slab with a DONATED
+        dynamic_update_slice, so the per-chunk device cost is chunk-sized
+        (an un-donated assembly would copy the whole slab per chunk, and
+        a concatenate at the end would re-copy the whole payload)."""
+        state = self._rdzv_in[msg.msg_id]
+        rt, dev = self.runtime, state["dev"]
+        payload, offset = msg.payload, msg.offset
+        direct = msg.path == "direct" and not isinstance(payload, np.ndarray)
+        key = "bytes_d2d" if direct else "bytes_staged"
+        self.stats[key] += payload.nbytes
+
+        def fn():
+            if state["slab"] is not None:
+                # scatter straight into the slab: the jitted update
+                # consumes the (host-view or device) chunk synchronously,
+                # so no alias into the sender's pooled buffer survives
+                src = payload if direct else np.asarray(payload)
+                slab = _slab_updater()(state["slab"], src, offset)
+                slab.block_until_ready()
+                state["slab"] = slab
+                return None
+            if direct:
+                return self._land_direct(payload, dev)
+            # single-chunk / non-jax landing: the Device API upload's
+            # aliasing guard gives us a private device copy of the view
+            local = rt._device(dev).upload(np.asarray(payload))
+            if hasattr(local, "block_until_ready"):
+                local.block_until_ready()
+            return local
+        state["uploads"][msg.seq] = (rt._async_transfer(dev, fn),
+                                     payload.nbytes)
+        state["arrived"] += 1
+        self.stats["chunks_in"] += 1
+        if state["arrived"] == msg.nchunks:
+            self._finish_rendezvous(msg.msg_id, last_seq=msg.seq)
+
+    def _finish_rendezvous(self, msg_id: int, last_seq: int) -> None:
+        """All chunks arrived: account pipeline overlap, await the tail
+        device copies, and invoke the handler with a device-resident
+        hetero_object. The reassembly entry stays in ``_rdzv_in`` until
+        the handler has run — ``Cluster.barrier`` reads it as a busy
+        signal, and popping early would let the barrier pass while the
+        tail uploads (up to a whole chunk) are still in flight."""
+        state = self._rdzv_in[msg_id]
+        try:
+            meta, dev = state["meta"], state["dev"]
+            uploads = state["uploads"]
+            for seq, (fut, nb) in uploads.items():
+                if seq != last_seq and fut.done():
+                    self.stats["overlap_bytes"] += nb
+            parts = []
+            for k in range(meta.nchunks):
+                fut, _ = uploads[k]
+                parts.append(fut.get(timeout=120))
+                self.runtime.futures.release(fut)
+            if state["slab"] is not None:
+                assembled = state["slab"].reshape(meta.payload_shape)
+            elif len(parts) == 1:
+                assembled = parts[0].reshape(meta.payload_shape)
+            else:   # non-jax Device backends (tests): plain host assembly
+                assembled = np.concatenate([np.asarray(p) for p in parts]) \
+                    .reshape(meta.payload_shape)
+            obj = self.runtime.adopt_device_array(assembled, dev)
+            # completion ack: the sender recycles its parked pool buffer
+            self.cluster.deliver(Message(msg_id=msg_id, kind="ack",
+                                         src=self.rank, dst=meta.src))
+            self._invoke(meta, obj)
+        finally:
+            del self._rdzv_in[msg_id]
+
     def _handle(self, msg: Message):
         if msg.kind == "meta":
             self.stats["received"] += 1
             if msg.payload_shape is None:
                 self._invoke(msg, None)
+            elif msg.protocol == "rdzv":
+                self._prepare_rendezvous(msg)
             elif msg.inline is not None:
                 arr = np.frombuffer(msg.inline, dtype=msg.payload_dtype
                                     ).reshape(msg.payload_shape).copy()
@@ -226,6 +480,14 @@ class Rank:
                 self._invoke(msg, obj)
             else:
                 self._pending_meta[msg.msg_id] = msg
+        elif msg.kind == "cts":
+            self._stream_chunks(msg.msg_id)
+        elif msg.kind == "chunk":
+            self._receive_chunk(msg)
+        elif msg.kind == "ack":
+            buf = self._rdzv_bufs.pop(msg.msg_id, None)
+            if buf is not None:
+                self.runtime.staging.release(buf)
         elif msg.kind == "payload":
             meta = self._pending_meta.pop(msg.msg_id, None)
             if meta is None:       # payload raced ahead of metadata
@@ -237,17 +499,41 @@ class Rank:
             self.stats["received"] += 1
             target = self.objects.get(msg.object_key)
             if target is not None:
-                fut = target.request_host(write=True)
-                arr = fut.get()
-                np.copyto(arr, msg.payload)
-                target.release()
+                if msg.path == "direct" \
+                        and not isinstance(msg.payload, np.ndarray):
+                    # consumer-routed device landing (ROADMAP follow-up
+                    # d): no host staging on the receive side either —
+                    # prefer the sender's hint, then a device already
+                    # holding the target, then the ledger's least-loaded
+                    pref = msg.consumer_device
+                    if pref is None:
+                        pref = next(iter(target.resident_devices()), None)
+                    dev = self.runtime.pick_landing_device(preferred=pref)
+                    local = self._land_direct(msg.payload, dev)
+                    self.stats["bytes_d2d"] += msg.payload.nbytes
+                    self.runtime.rebind_device_copy(target, local, dev)
+                else:
+                    fut = target.request_host(write=True)
+                    arr = fut.get()
+                    np.copyto(arr, np.asarray(msg.payload))
+                    target.release()
             if msg.handler:
                 self._invoke(msg, target)
         elif msg.kind == "get":
             self.stats["received"] += 1
             src_obj = self.objects.get(msg.object_key)
             self.send(msg.src, msg.handler, src_obj,
-                      user={"object_key": msg.object_key})
+                      user={"object_key": msg.object_key},
+                      path=msg.path or "host",
+                      consumer_device=msg.consumer_device)
+
+    def _land_direct(self, payload: Any, device_id: int) -> Any:
+        """One Device API D2D landing for a foreign (cross-rank) device
+        payload, observed into the local interconnect model — the single
+        path every direct receive (monolithic, chunk, put) routes
+        through."""
+        return d2d_transfer(None, self.runtime._device(device_id), payload,
+                            observer=self.runtime.topology.observe)
 
     def _landing_device(self, meta: Message) -> int:
         """Consumer-routed delivery: the sender's per-message
@@ -268,11 +554,10 @@ class Rank:
         consumer task's device (falling back to least-loaded) — never
         staged through host (paper §3.2.3 Fig. 7)."""
         if msg.path == "direct" and not isinstance(msg.payload, np.ndarray):
-            dst = self.runtime._device(self._landing_device(meta))
-            local = d2d_transfer(None, dst, msg.payload)
+            dev = self._landing_device(meta)
+            local = self._land_direct(msg.payload, dev)
             self.stats["bytes_d2d"] += msg.payload.nbytes
-            return self.runtime.adopt_device_array(local,
-                                                   dst.info.device_id)
+            return self.runtime.adopt_device_array(local, dev)
         self.stats["bytes_staged"] += msg.payload.nbytes
         return self.runtime.hetero_object(msg.payload)
 
@@ -283,7 +568,10 @@ class Rank:
 
     def _pump(self):
         while not self._stop:
-            self._flush_outgoing()
+            try:
+                self._flush_outgoing()
+            finally:
+                self._active = False
             try:
                 msg = self.inbox.get(timeout=0.001)
             except queue.Empty:
@@ -292,11 +580,14 @@ class Rank:
                 return
             if msg is _FLUSH:
                 continue          # woken to flush outgoing; loop does it
+            self._active = True   # popped but effects not yet visible
             try:
                 self._handle(msg)
             except BaseException:   # a bad message must not kill the rank
                 import traceback
                 traceback.print_exc()
+            finally:
+                self._active = False
 
     def shutdown(self):
         self._stop = True
@@ -321,36 +612,70 @@ class HandlerContext:
 class Cluster:
     """In-process rank set with a simulated network. ``latency_s`` and
     ``bw_bytes_per_s`` let benchmarks model interconnect behaviour; the
-    'direct' path skips the host-staging cost the way GPU-aware MPI does."""
+    'direct' path skips the host-staging cost the way GPU-aware MPI does.
+
+    ``topology`` is the rank-pair ``InterconnectModel``: every
+    payload-carrying delivery is timed into it, and the rendezvous
+    protocol sizes its chunks from the measured bandwidth-delay product
+    of the (src, dst) pair."""
 
     def __init__(self, n_ranks: int, rt_config: Optional[RuntimeConfig] = None,
                  latency_s: float = 0.0, bw_bytes_per_s: float = 0.0):
         self.latency_s = latency_s
         self.bw = bw_bytes_per_s
+        self.topology = InterconnectModel()
         self.ranks = [Rank(self, r, rt_config) for r in range(n_ranks)]
 
+    @staticmethod
+    def _delay(seconds: float) -> None:
+        """Precise simulated transmission time: coarse sleep for the bulk,
+        spin for the tail. time.sleep alone overshoots sub-millisecond
+        delays by ~1ms on Linux, which would bill every pipeline chunk a
+        phantom milli­second and invert the benchmark."""
+        end = time.perf_counter() + seconds
+        if seconds > 0.002:
+            time.sleep(seconds - 0.002)
+        while time.perf_counter() < end:
+            pass
+
     def deliver(self, msg: Message):
+        nbytes = msg.payload.nbytes if msg.payload is not None else \
+            (len(msg.inline) if msg.inline is not None else 0)
+        t0 = time.perf_counter()
         if self.latency_s or (self.bw and msg.payload is not None):
             delay = self.latency_s
             if self.bw and msg.payload is not None:
                 delay += msg.payload.nbytes / self.bw
             if delay > 0:
-                time.sleep(delay)
+                self._delay(delay)
         self.ranks[msg.dst].inbox.put(msg)
+        if nbytes:
+            self.topology.observe(msg.src, msg.dst, nbytes,
+                                  time.perf_counter() - t0)
+
+    def _rank_busy(self, r: Rank) -> bool:
+        with r._out_lock:
+            if r.outgoing:
+                return True
+        return (not r.inbox.empty() or r._active
+                or bool(r._rdzv_out) or bool(r._rdzv_in))
 
     def barrier(self, timeout: float = 60.0):
+        """Wait until every rank's message work has drained, then barrier
+        the runtimes. Requires TWO consecutive all-idle sweeps: a pump
+        marks itself ``_active`` before its delivery lands in a peer's
+        inbox, so anything in flight during sweep one is visible (inbox
+        or _active) to sweep two."""
         deadline = time.time() + timeout
-        for r in self.ranks:
-            # outgoing queues drained + runtimes idle
-            while True:
-                with r._out_lock:
-                    busy = bool(r.outgoing)
-                busy = busy or not r.inbox.empty()
-                if not busy:
-                    break
+        idle_sweeps = 0
+        while idle_sweeps < 2:
+            if any(self._rank_busy(r) for r in self.ranks):
+                idle_sweeps = 0
                 if time.time() > deadline:
                     raise TimeoutError("cluster barrier timeout")
                 time.sleep(0.001)
+            else:
+                idle_sweeps += 1
         for r in self.ranks:
             r.runtime.barrier(timeout=max(deadline - time.time(), 1.0))
 

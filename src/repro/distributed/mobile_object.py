@@ -27,21 +27,48 @@ class MobilePtr:
 
 class OwnerMap:
     """oid -> rank, replicated control state. Deterministic given the event
-    log (assign/migrate), so every rank can replay it."""
+    log (assign/migrate), so every rank can replay it.
+
+    Each entry may also carry a per-chunk **device hint** — the device id
+    (on the owner rank) whose tasks consume the chunk. Migration executors
+    pass it as ``Rank.send(..., consumer_device=...)``/``put(...)`` so the
+    payload lands where the chunk's tasks run (ROADMAP follow-up d). A
+    migration without a new hint clears the old one: device ids are local
+    to the previous owner and would mis-route on the new rank."""
 
     def __init__(self):
         self._owner: Dict[int, int] = {}
+        self._hints: Dict[int, int] = {}
         self.version = 0
 
-    def assign(self, oid: int, rank: int) -> None:
+    def assign(self, oid: int, rank: int,
+               device_hint: Optional[int] = None) -> None:
         self._owner[oid] = rank
+        if device_hint is not None:
+            self._hints[oid] = device_hint
         self.version += 1
 
     def owner(self, oid: int) -> int:
         return self._owner[oid]
 
-    def migrate(self, oid: int, new_rank: int) -> None:
+    def device_hint(self, oid: int) -> Optional[int]:
+        """Consumer device id on the owner rank, if a hint is recorded."""
+        return self._hints.get(oid)
+
+    def set_device_hint(self, oid: int, device_id: Optional[int]) -> None:
+        if device_id is None:
+            self._hints.pop(oid, None)
+        else:
+            self._hints[oid] = device_id
+        self.version += 1
+
+    def migrate(self, oid: int, new_rank: int,
+                device_hint: Optional[int] = None) -> None:
         self._owner[oid] = new_rank
+        if device_hint is None:
+            self._hints.pop(oid, None)
+        else:
+            self._hints[oid] = device_hint
         self.version += 1
 
     def owned_by(self, rank: int) -> List[int]:

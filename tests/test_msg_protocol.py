@@ -1,0 +1,292 @@
+"""Message-protocol split (paper §4.2): eager vs rendezvous selection,
+chunk-streamed reassembly integrity (in-order and out-of-order),
+consumer-routed rendezvous landing, direct put/get routing, pool-buffer
+recycling via the completion ack, and OwnerMap device hints."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import RuntimeConfig
+from repro.distributed import Cluster, OwnerMap, handler
+
+_lock = threading.Lock()
+_received = {}
+
+
+@handler(name="proto_recv")
+def _recv(ctx, obj):
+    with _lock:
+        _received["obj"] = obj
+        _received["data"] = None if obj is None else obj.get()
+
+
+@handler(name="proto_done")
+def _done(ctx, obj):
+    with _lock:
+        _received["done"] = True
+
+
+def _wait_for(key, timeout=20.0):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        with _lock:
+            if key in _received:
+                return True
+        time.sleep(0.005)
+    return False
+
+
+@pytest.fixture()
+def cluster():
+    cfg = RuntimeConfig(memory_capacity=1 << 28,
+                        eager_threshold=64 << 10, chunk_bytes=128 << 10)
+    with Cluster(2, cfg) as c:
+        with _lock:
+            _received.clear()
+        yield c
+
+
+# ---------------------------------------------------------------------------
+# protocol selection
+# ---------------------------------------------------------------------------
+
+def test_small_payload_travels_eagerly(cluster):
+    data = np.arange(1024, dtype=np.float32)        # 4 KB ≤ threshold
+    obj = cluster.ranks[0].runtime.hetero_object(data)
+    cluster.ranks[0].send(1, "proto_recv", obj)
+    assert _wait_for("data")
+    np.testing.assert_array_equal(_received["data"], data)
+    assert cluster.ranks[0].stats["eager"] == 1
+    assert cluster.ranks[0].stats["rendezvous"] == 0
+    assert cluster.ranks[1].stats["chunks_in"] == 0
+
+
+def test_large_payload_switches_to_rendezvous(cluster):
+    data = np.arange(1 << 17, dtype=np.float32)     # 512 KB > threshold
+    obj = cluster.ranks[0].runtime.hetero_object(data)
+    cluster.ranks[0].send(1, "proto_recv", obj)
+    assert _wait_for("data")
+    np.testing.assert_array_equal(_received["data"], data)
+    s = cluster.ranks[0].stats
+    assert s["eager"] == 0 and s["rendezvous"] == 1
+    assert s["chunks_out"] == 4                      # 512 KB / 128 KB
+    assert cluster.ranks[1].stats["chunks_in"] == 4
+
+
+def test_threshold_boundary_is_inclusive(cluster):
+    data = np.zeros((64 << 10) // 4, np.float32)    # exactly threshold
+    obj = cluster.ranks[0].runtime.hetero_object(data)
+    cluster.ranks[0].send(1, "proto_recv", obj)
+    assert _wait_for("data")
+    assert cluster.ranks[0].stats["eager"] == 1
+    assert cluster.ranks[0].stats["rendezvous"] == 0
+
+
+# ---------------------------------------------------------------------------
+# reassembly integrity
+# ---------------------------------------------------------------------------
+
+def test_chunked_reassembly_bit_exact_2d(cluster):
+    rng = np.random.default_rng(7)
+    data = rng.random((384, 384)).astype(np.float32)   # 576 KB, 5 chunks
+    obj = cluster.ranks[0].runtime.hetero_object(data.copy())
+    cluster.ranks[0].send(1, "proto_recv", obj)
+    assert _wait_for("data")
+    np.testing.assert_array_equal(_received["data"], data)
+    # the landed object is device-resident (pipelined upload), not host
+    assert _received["obj"].resident_devices()
+
+
+def test_uneven_tail_chunk_reassembles(cluster):
+    # 300 KB: 2 full 128 KB chunks + one 44 KB tail
+    data = np.arange((300 << 10) // 4, dtype=np.float32)
+    obj = cluster.ranks[0].runtime.hetero_object(data.copy())
+    cluster.ranks[0].send(1, "proto_recv", obj)
+    assert _wait_for("data")
+    np.testing.assert_array_equal(_received["data"], data)
+    assert cluster.ranks[0].stats["chunks_out"] == 3
+
+
+class _ReorderingCluster(Cluster):
+    """Delivers each rendezvous stream's chunks in REVERSE order — the
+    out-of-order arrival a real network can produce."""
+
+    def deliver(self, msg):
+        if msg.kind == "chunk":
+            held = self._held.setdefault(msg.msg_id, [])
+            held.append(msg)
+            if len(held) == msg.nchunks:
+                for m in reversed(held):
+                    super().deliver(m)
+                del self._held[msg.msg_id]
+            return
+        super().deliver(msg)
+
+
+def test_out_of_order_chunk_arrival_reassembles():
+    cfg = RuntimeConfig(memory_capacity=1 << 28,
+                        eager_threshold=64 << 10, chunk_bytes=128 << 10)
+    c = _ReorderingCluster.__new__(_ReorderingCluster)
+    c._held = {}
+    Cluster.__init__(c, 2, cfg)
+    try:
+        with _lock:
+            _received.clear()
+        data = np.arange(1 << 17, dtype=np.float32)    # 4 chunks
+        obj = c.ranks[0].runtime.hetero_object(data.copy())
+        c.ranks[0].send(1, "proto_recv", obj)
+        assert _wait_for("data")
+        np.testing.assert_array_equal(_received["data"], data)
+        assert c.ranks[1].stats["chunks_in"] == 4
+    finally:
+        c.shutdown()
+
+
+def test_cluster_barrier_covers_whole_rendezvous(cluster):
+    """Regression: barrier() must not return between the last chunk's
+    dequeue and the handler invocation (reassembly state lives in
+    _rdzv_in until the handler ran; the pump flags itself active while
+    extracting work)."""
+    for trial in range(3):
+        with _lock:
+            _received.clear()
+        data = np.arange(1 << 17, dtype=np.float32) + trial
+        obj = cluster.ranks[0].runtime.hetero_object(data)
+        cluster.ranks[0].send(1, "proto_recv", obj)
+        cluster.barrier()
+        with _lock:
+            assert "data" in _received, f"trial {trial}: barrier early"
+            np.testing.assert_array_equal(_received["data"], data)
+
+
+# ---------------------------------------------------------------------------
+# consumer routing on the rendezvous path
+# ---------------------------------------------------------------------------
+
+def test_rendezvous_lands_on_consumer_device(cluster):
+    rt1 = cluster.ranks[1].runtime
+    if len(rt1.devices) < 2:
+        pytest.skip("needs >= 2 (virtual) devices")
+    data = np.arange(1 << 17, dtype=np.float32)
+    rt0 = cluster.ranks[0].runtime
+    obj = rt0.hetero_object(data)
+    rt0.run(lambda v: v + 1.0, [(obj, "rw")])
+    rt0.barrier()
+    cluster.ranks[0].send(1, "proto_recv", obj, path="direct",
+                          consumer_device=1)
+    assert _wait_for("obj")
+    assert _received["obj"].resident_devices() == {1}
+    np.testing.assert_allclose(_received["data"], data + 1.0)
+    assert cluster.ranks[0].stats["rendezvous"] == 1
+
+
+def test_rendezvous_respects_route_to(cluster):
+    rt1 = cluster.ranks[1].runtime
+    if len(rt1.devices) < 2:
+        pytest.skip("needs >= 2 (virtual) devices")
+    cluster.ranks[1].route_to("proto_recv", 1)
+    try:
+        data = np.ones(1 << 17, np.float32)
+        obj = cluster.ranks[0].runtime.hetero_object(data)
+        cluster.ranks[0].send(1, "proto_recv", obj)   # host-staged rdzv
+        assert _wait_for("obj")
+        assert _received["obj"].resident_devices() == {1}
+    finally:
+        cluster.ranks[1].routes.clear()
+
+
+# ---------------------------------------------------------------------------
+# staging-pool recycle via the completion ack
+# ---------------------------------------------------------------------------
+
+def test_ack_returns_streamed_buffer_to_pool(cluster):
+    data = np.ones(1 << 17, np.float32)
+    r0 = cluster.ranks[0]
+    obj = r0.runtime.hetero_object(data)
+    r0.send(1, "proto_recv", obj)
+    assert _wait_for("data")
+    deadline = time.time() + 10
+    while r0._rdzv_bufs and time.time() < deadline:
+        time.sleep(0.005)
+    assert not r0._rdzv_bufs          # ack arrived, buffer released
+    hits0 = r0.runtime.staging.hits
+    with _lock:
+        _received.clear()
+    obj2 = r0.runtime.hetero_object(data * 2)
+    r0.send(1, "proto_recv", obj2)    # same shape: pool must hit
+    assert _wait_for("data")
+    assert r0.runtime.staging.hits > hits0
+
+
+# ---------------------------------------------------------------------------
+# consumer-routed put/get (ROADMAP follow-up d)
+# ---------------------------------------------------------------------------
+
+def test_direct_put_lands_device_resident_no_host_staging(cluster):
+    rt0, rt1 = cluster.ranks[0].runtime, cluster.ranks[1].runtime
+    if len(rt1.devices) < 2:
+        pytest.skip("needs >= 2 (virtual) devices")
+    target = rt1.hetero_object(np.zeros((64, 64), np.float32))
+    cluster.ranks[1].register_object("tgt", target)
+    src = rt0.hetero_object(np.full((64, 64), 3.0, np.float32))
+    rt0.run(lambda v: v * 2.0, [(src, "rw")])   # leaves a device copy
+    rt0.barrier()
+    staged0 = cluster.ranks[1].stats["bytes_staged"]
+    cluster.ranks[0].put(1, "tgt", src, on_done="proto_done",
+                         path="direct", consumer_device=1)
+    assert _wait_for("done")
+    assert target.resident_devices() == {1}
+    np.testing.assert_allclose(target.get(), 6.0)
+    assert cluster.ranks[1].stats["bytes_staged"] == staged0
+    assert cluster.ranks[1].stats["bytes_d2d"] >= src.nbytes
+
+
+def test_direct_put_host_only_degrades_to_staged(cluster):
+    rt0, rt1 = cluster.ranks[0].runtime, cluster.ranks[1].runtime
+    target = rt1.hetero_object(np.zeros((32,), np.float32))
+    cluster.ranks[1].register_object("tgt2", target)
+    src = rt0.hetero_object(np.full((32,), 5.0, np.float32))
+    cluster.ranks[0].put(1, "tgt2", src, on_done="proto_done",
+                         path="direct")
+    assert _wait_for("done")
+    np.testing.assert_allclose(target.get(), 5.0)
+
+
+def test_get_reply_is_consumer_routed(cluster):
+    rt0, rt1 = cluster.ranks[0].runtime, cluster.ranks[1].runtime
+    if len(rt0.devices) < 2:
+        pytest.skip("needs >= 2 (virtual) devices")
+    remote = rt1.hetero_object(np.full((64, 64), 4.0, np.float32))
+    rt1.run(lambda v: v + 1.0, [(remote, "rw")])   # device copy on owner
+    rt1.barrier()
+    cluster.ranks[1].register_object("src", remote)
+    cluster.ranks[0].get(1, "src", "proto_recv", path="direct",
+                         consumer_device=1)
+    assert _wait_for("obj")
+    assert _received["obj"].resident_devices() == {1}
+    np.testing.assert_allclose(_received["data"], 5.0)
+
+
+# ---------------------------------------------------------------------------
+# OwnerMap device hints
+# ---------------------------------------------------------------------------
+
+def test_ownermap_carries_device_hints():
+    om = OwnerMap()
+    om.assign(0, rank=1, device_hint=3)
+    om.assign(1, rank=1)
+    assert om.device_hint(0) == 3
+    assert om.device_hint(1) is None
+    v = om.version
+    om.set_device_hint(1, 2)
+    assert om.device_hint(1) == 2 and om.version == v + 1
+    # migration without a fresh hint clears the stale one (device ids are
+    # local to the previous owner)
+    om.migrate(0, new_rank=0)
+    assert om.device_hint(0) is None
+    om.migrate(1, new_rank=0, device_hint=1)
+    assert om.device_hint(1) == 1
+    om.set_device_hint(1, None)
+    assert om.device_hint(1) is None

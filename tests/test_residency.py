@@ -368,7 +368,116 @@ def test_stats_surface_pool_and_residency_gauges():
         s = rt.stats()
         for key in ("staging_hits", "staging_misses", "request_pool_hits",
                     "request_pool_misses", "bytes_resident",
-                    "objects_resident", "evictions", "prefetch_stalls"):
+                    "objects_resident", "evictions", "prefetch_stalls",
+                    "pinned_objects", "topology"):
             assert key in s, key
         assert sum(s["bytes_resident"].values()) >= x.nbytes
         assert x.resident_devices() <= set(s["bytes_resident"])
+
+
+# ---------------------------------------------------------------------------
+# ledger-owned pins (ROADMAP follow-up c)
+# ---------------------------------------------------------------------------
+
+def test_ledger_pin_blocks_eviction_without_object_locks():
+    led = ResidencyLedger({0: 1000})
+    a, b = _obj(64), _obj(64)                 # 256 B each
+    led.record(0, a)
+    led.record(0, b)
+    led.pin(a)
+    seen = []
+
+    def evict(obj, dev):
+        seen.append(obj)
+        led.drop(dev, obj)
+        return True
+
+    led.ensure_capacity(0, 900, evict)
+    assert a not in seen and b in seen        # pinned replica skipped
+    assert led.pinned(a) and not led.pinned(b)
+    led.unpin(a)
+    assert not led.pinned(a)
+    assert led.gauges()["pinned_objects"] == 0
+
+
+def test_pin_counts_nest():
+    led = ResidencyLedger({0: 1 << 20})
+    a = _obj(16)
+    led.pin(a)
+    led.pin(a)
+    led.unpin(a)
+    assert led.pinned(a)
+    led.unpin(a)
+    assert not led.pinned(a)
+
+
+def test_runtime_pins_during_host_access_and_tasks():
+    with Runtime(RuntimeConfig(memory_capacity=1 << 28)) as rt:
+        x = rt.hetero_object(np.ones((32,), np.float32))
+        fut = x.request_host(write=False)
+        fut.get(5)
+        assert rt.residency.pinned(x)         # pinned until release
+        x.release()
+        assert not rt.residency.pinned(x)
+        rt.run(lambda v: v + 1.0, [(x, "rw")])
+        rt.barrier()
+        assert not rt.residency.pinned(x)     # unpinned at task finish
+
+
+def test_eviction_under_pressure_skips_pinned_and_stays_correct():
+    """A pinned object's device replica survives capacity pressure; the
+    unpinned one is evicted instead (spilled to host, data intact)."""
+    cfg = RuntimeConfig(memory_capacity=350 << 10, topology_probe=False,
+                        scheduler="fifo", dedicated_threads=False)
+    with Runtime(cfg) as rt:
+        keep = rt.hetero_object(np.ones((128, 128), np.float32))   # 64 KB
+        spill = rt.hetero_object(np.full((128, 128), 2.0, np.float32))
+        rt._ensure_on_device(keep, 0, will_write=False)
+        rt._ensure_on_device(spill, 0, will_write=False)
+        rt.residency.pin(keep)
+        big = rt.hetero_object(np.zeros((256, 256), np.float32))   # 256 KB
+        rt._ensure_on_device(big, 0, will_write=False)
+        assert rt.residency.holds(0, keep)
+        assert not rt.residency.holds(0, spill)
+        rt.residency.unpin(keep)
+        np.testing.assert_allclose(spill.get(), 2.0)
+
+
+# ---------------------------------------------------------------------------
+# re-score aged ready-queue entries on pop (ROADMAP follow-up a)
+# ---------------------------------------------------------------------------
+
+def test_gravity_pop_rescores_stale_placement():
+    led = ResidencyLedger({0: 1 << 20, 1: 1 << 20})
+    s = GravityScheduler({0: "cpu", 1: "cpu"})
+    s.placement.bind(led)
+    o = _obj(1 << 14)
+    led.record(0, o)
+    t = _task(o)
+    s.push(t)
+    assert s.queued[0] == 1                   # placed with its data
+    led.drop(0, o)                            # residency shifts...
+    led.record(1, o)
+    assert s.pop(0) is None                   # stale head re-homed
+    assert s.queued == {0: 0, 1: 1}
+    got, dev = s.pop(1)
+    assert got is t and dev == 1
+    assert s.queued == {0: 0, 1: 0}
+
+
+def test_gravity_pop_without_residency_change_is_untouched():
+    led = ResidencyLedger({0: 1 << 20, 1: 1 << 20})
+    s = GravityScheduler({0: "cpu", 1: "cpu"})
+    s.placement.bind(led)
+    o = _obj(1 << 14)
+    led.record(0, o)
+    t = _task(o)
+    s.push(t)
+    got, dev = s.pop(0)                       # version unchanged: O(1) pop
+    assert got is t and dev == 0
+
+
+def test_rescore_disabled_for_load_only_policies():
+    from repro.core import LeastLoadedScheduler
+    assert GravityScheduler.rescore_on_pop
+    assert not LeastLoadedScheduler.rescore_on_pop

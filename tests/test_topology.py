@@ -1,0 +1,236 @@
+"""InterconnectModel: deterministic EWMA convergence (observations are
+fed directly — the model is clock-free), bandwidth-delay-product chunk
+sizing with quantization + hysteresis, the startup micro-probe against a
+FakeDevice with known latencies, and the topology-derived gravity
+penalty (ROADMAP follow-up b)."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (DataGravityPolicy, InterconnectModel, Runtime,
+                        RuntimeConfig)
+from repro.core.device_api import Device, DeviceInfo
+from repro.core.hetero_object import HOST
+from repro.core.topology import (DEFAULT_BANDWIDTH, DEFAULT_LATENCY,
+                                 probe_runtime_links)
+
+
+# ---------------------------------------------------------------------------
+# EWMA convergence (deterministic: samples fed directly)
+# ---------------------------------------------------------------------------
+
+def test_first_sample_replaces_default():
+    m = InterconnectModel()
+    assert m.bandwidth(0, 1) == DEFAULT_BANDWIDTH
+    # 1 MB in 1 ms -> ~1.05 GB/s after latency subtraction
+    m.observe(0, 1, 1 << 20, 1e-3)
+    bw = m.bandwidth(0, 1)
+    assert bw != DEFAULT_BANDWIDTH
+    expect = (1 << 20) / (1e-3 - DEFAULT_LATENCY)
+    assert bw == pytest.approx(expect, rel=1e-6)
+
+
+def test_ewma_converges_to_true_bandwidth():
+    m = InterconnectModel(alpha=0.25)
+    true_bw = 2e9
+    nb = 4 << 20
+    for _ in range(40):
+        m.observe(0, 1, nb, m.latency(0, 1) + nb / true_bw)
+    assert m.bandwidth(0, 1) == pytest.approx(true_bw, rel=0.01)
+    assert m.samples(0, 1) == 40
+
+
+def test_small_transfers_update_latency_not_bandwidth():
+    m = InterconnectModel()
+    bw0 = m.bandwidth(0, 1)
+    for _ in range(10):
+        m.observe(0, 1, 256, 5e-6)      # tiny: dispatch-dominated
+    assert m.bandwidth(0, 1) == bw0     # untouched
+    assert m.latency(0, 1) == pytest.approx(5e-6, rel=0.05)
+
+
+def test_links_are_directed_and_independent():
+    m = InterconnectModel()
+    m.observe(0, 1, 1 << 20, 1e-3)
+    assert m.bandwidth(1, 0) == DEFAULT_BANDWIDTH
+    assert m.samples(1, 0) == 0
+
+
+def test_cost_s_is_latency_plus_bytes_over_bandwidth():
+    m = InterconnectModel()
+    m.observe(0, 1, 1 << 20, 1e-3)
+    lat, bw = m.latency(0, 1), m.bandwidth(0, 1)
+    assert m.cost_s(0, 1, 8 << 20) == pytest.approx(
+        lat + (8 << 20) / bw, rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# chunk sizing: BDP, quantization, clamps, hysteresis
+# ---------------------------------------------------------------------------
+
+def test_chunk_bytes_is_quantized_power_of_two_and_clamped():
+    m = InterconnectModel()
+    nb = 8 << 20
+    m.observe(0, 1, nb, m.latency(0, 1) + nb / 1e9)   # ~1 GB/s
+    c = m.chunk_bytes(0, 1, 2e-3)                      # BDP ~2 MB
+    assert c & (c - 1) == 0                            # power of two
+    assert c == 2 << 20
+    # clamps survive degenerate estimates
+    m2 = InterconnectModel(default_bandwidth=1e3)      # absurdly slow
+    assert m2.chunk_bytes(0, 1, 1e-3, lo=64 << 10, hi=4 << 20) == 64 << 10
+    m3 = InterconnectModel(default_bandwidth=1e15)     # absurdly fast
+    assert m3.chunk_bytes(0, 1, 1e-3, lo=64 << 10, hi=4 << 20) == 4 << 20
+
+
+def test_chunk_bytes_hysteresis_keeps_choice_stable():
+    m = InterconnectModel(alpha=0.5)
+    nb = 8 << 20
+    m.observe(0, 1, nb, m.latency(0, 1) + nb / 1e9)    # ~1 GB/s
+    first = m.chunk_bytes(0, 1, 2e-3)
+    # small drift (×1.5) stays inside the band: choice must not move
+    m.observe(0, 1, nb, m.latency(0, 1) + nb / 1.5e9)
+    assert m.chunk_bytes(0, 1, 2e-3) == first
+    # an order-of-magnitude shift escapes the band
+    for _ in range(20):
+        m.observe(0, 1, nb, m.latency(0, 1) + nb / 40e9)
+    assert m.chunk_bytes(0, 1, 2e-3) > first
+
+
+def test_penalty_bytes_scales_with_bandwidth_and_clamps():
+    m = InterconnectModel()
+    nb = 8 << 20
+    m.observe(0, 1, nb, m.latency(0, 1) + nb / 4e9)    # ~4 GB/s
+    p = m.penalty_bytes(0, 1, 50e-6)                   # ≈ 200 KB
+    assert 64 << 10 <= p <= 1 << 20
+    assert p == pytest.approx(4e9 * 50e-6, rel=0.05)
+    slow = InterconnectModel(default_bandwidth=1e3)
+    assert slow.penalty_bytes(0, 1, 50e-6) == 64 << 10     # floor
+    fast = InterconnectModel(default_bandwidth=1e15)
+    assert fast.penalty_bytes(0, 1, 50e-6) == 1 << 20      # ceiling
+
+
+def test_snapshot_shape():
+    m = InterconnectModel()
+    m.observe(0, 1, 1 << 20, 1e-3)
+    snap = m.snapshot()
+    assert "0->1" in snap
+    assert set(snap["0->1"]) == {"bw_MBps", "lat_us", "samples"}
+
+
+# ---------------------------------------------------------------------------
+# startup micro-probe against a FakeDevice clock
+# ---------------------------------------------------------------------------
+
+class FakeDevice(Device):
+    """Uploads/transfers sleep a fixed time — the probe's wall-clock
+    samples are bounded below by it."""
+
+    def __init__(self, device_id, upload_s=0.0, transfer_s=0.0):
+        super().__init__(DeviceInfo(device_id, "cpu", 1 << 30, "fake"))
+        self.upload_s = upload_s
+        self.transfer_s = transfer_s
+        self.uploads = 0
+        self.transfers = 0
+
+    def upload(self, host_array):
+        self.uploads += 1
+        if self.upload_s:
+            time.sleep(self.upload_s)
+        return np.array(host_array)
+
+    def download(self, dev_array):
+        return np.asarray(dev_array)
+
+    def transfer_from(self, src, dev_array):
+        self.transfers += 1
+        if self.transfer_s:
+            time.sleep(self.transfer_s)
+        return np.array(dev_array)
+
+    def launch(self, kernel, args, donate=()):
+        return kernel(*args)
+
+    def synchronize(self, handle):
+        return handle
+
+    def is_ready(self, handle):
+        return True
+
+
+def test_probe_seeds_host_and_ring_links():
+    devs = [FakeDevice(0, upload_s=0.002), FakeDevice(1, upload_s=0.002)]
+    m = InterconnectModel()
+    probe_runtime_links(m, devs, nbytes=64 << 10)
+    for d in (0, 1):
+        assert m.samples(HOST, d) == 1
+    assert m.samples(0, 1) == 1 and m.samples(1, 0) == 1
+    # a 2 ms sleep on 64 KB bounds the measured bandwidth from above
+    assert m.bandwidth(HOST, 0) <= (64 << 10) / 0.002 * 1.05
+    assert devs[0].uploads == 1 and devs[1].uploads == 1
+
+
+def test_probe_single_device_skips_ring():
+    dev = FakeDevice(0)
+    m = InterconnectModel()
+    probe_runtime_links(m, [dev], nbytes=16 << 10)
+    assert m.samples(HOST, 0) == 1
+    assert dev.transfers == 0
+
+
+# ---------------------------------------------------------------------------
+# runtime integration
+# ---------------------------------------------------------------------------
+
+def test_runtime_stats_surface_topology_and_probe_seeds():
+    with Runtime(RuntimeConfig(memory_capacity=1 << 26)) as rt:
+        snap = rt.stats()["topology"]
+        # the startup probe seeded at least the host→device links
+        for d in rt.devices:
+            key = f"{HOST}->{d.info.device_id}"
+            assert key in snap and snap[key]["samples"] >= 1
+
+
+def test_runtime_topology_probe_off():
+    cfg = RuntimeConfig(memory_capacity=1 << 26, topology_probe=False)
+    with Runtime(cfg) as rt:
+        assert rt.stats()["topology"] == {}
+
+
+def test_transfers_refine_the_model_online():
+    with Runtime(RuntimeConfig(memory_capacity=1 << 26)) as rt:
+        d0 = rt.devices[0].info.device_id
+        before = rt.topology.samples(HOST, d0)
+        x = rt.hetero_object(np.ones((128, 128), np.float32))
+        rt._ensure_on_device(x, d0, will_write=False)
+        assert rt.topology.samples(HOST, d0) == before + 1
+
+
+def test_gravity_penalty_derived_from_measured_bandwidth():
+    pol = DataGravityPolicy(load_penalty_bytes=123)
+    # unbound: the fixed fallback constant
+    assert pol.penalty_bytes(0) == 123
+    m = InterconnectModel()
+    nb = 8 << 20
+    m.observe(HOST, 0, nb, m.latency(HOST, 0) + nb / 4e9)
+    pol.bind_topology(m)
+    p = pol.penalty_bytes(0)
+    assert p != 123
+    assert p == pytest.approx(4e9 * pol.penalty_seconds, rel=0.05)
+
+
+def test_gravity_transfer_cost_estimate_uses_topology():
+    from repro.core import HeteroObject, HeteroTask
+    pol = DataGravityPolicy()
+    m = InterconnectModel()
+    nb = 8 << 20
+    m.observe(HOST, 0, nb, m.latency(HOST, 0) + nb / 2e9)
+    pol.bind_topology(m)
+    o = HeteroObject(None, value=np.zeros(1 << 18, np.float32))  # 1 MB
+    t = HeteroTask()
+    t.arg(o).read()
+    cost = pol.transfer_cost_s(t, 0)
+    assert cost == pytest.approx(m.cost_s(HOST, 0, o.nbytes), rel=1e-9)
+    # runtime binds it automatically
+    with Runtime(RuntimeConfig(memory_capacity=1 << 26)) as rt:
+        assert rt.scheduler.placement.topology is rt.topology
