@@ -69,7 +69,7 @@ LADDER = [
 LADDER_BY_NAME = dict(LADDER)
 
 # rungs with their own workload/measurement, appended after the ladder
-EXTRA_RUNGS = ["SCHED-Locality", "MSG-Pipeline"]
+EXTRA_RUNGS = ["SCHED-Locality", "MSG-Pipeline", "MSG-HOL"]
 
 # subset of Runtime.stats() recorded per rung in the JSON report
 _REPORT_KEYS = ("staging_hits", "staging_misses", "request_pool_hits",
@@ -147,6 +147,16 @@ def bench_msg_pipeline(iters: int = 10) -> Dict:
                                 / small_row["mono_us"] - 1.0, 4),
         "large_speedup": large_row["speedup"],
     }
+
+
+def bench_msg_hol(samples: int = 40) -> Dict:
+    """MSG-HOL rung: small-message p50 delivery latency with and without
+    a concurrent 8 MiB rendezvous stream on the same rank pair (paper
+    §5–6: control messages stay within a small overhead factor while
+    payloads stream). The progress engine keeps the ratio near 1; the
+    pre-engine pump serialized every small message behind the stream."""
+    import msgrate   # benchmarks/ is on sys.path when run as a script
+    return msgrate.run_hol(samples=samples)
 
 
 def bench_config(name: str, overrides: Dict, n: int, iters: int,
@@ -234,6 +244,18 @@ def main(argv=None):
         print(f"fig12_MSG-Pipeline_summary,,"
               f"overhead{row['small_overhead']:+.3f}_"
               f"x{row['large_speedup']:.3f}")
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(row, f, indent=2)
+        return
+    if args.only == "MSG-HOL":
+        row = bench_msg_hol(samples=max(args.iters * 2, 20))
+        print(f"figHOL_MSG-HOL_unloaded_{row['small_bytes']},"
+              f"{row['p50_unloaded_us']:.1f},")
+        print(f"figHOL_MSG-HOL_loaded_{row['small_bytes']},"
+              f"{row['p50_loaded_us']:.1f},x{row['ratio']:.3f}")
+        print(f"figHOL_MSG-HOL_summary,,window{row['max_window']}_"
+              f"chunks{row['stream_chunks']}")
         if args.json:
             with open(args.json, "w") as f:
                 json.dump(row, f, indent=2)

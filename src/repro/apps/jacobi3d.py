@@ -184,9 +184,13 @@ def _slab_bounds(n: int, parts: int) -> List[Tuple[int, int]]:
 
 def run_cluster(u0: np.ndarray, iters: int, cluster) -> np.ndarray:
     """Distributed Jacobi over ``cluster``'s ranks: axis-0 slab
-    decomposition, scatter/gather through ``Rank.send`` (rendezvous for
-    slabs above the eager threshold), per-iteration halo planes through
-    eager ``Rank.put`` into preregistered halo objects."""
+    decomposition, scatter/gather through ``Rank.send`` (credit-windowed
+    rendezvous streams for slabs above the eager threshold — big slabs
+    never head-of-line block the halo control traffic), per-iteration
+    halo planes through DIRECT ``Rank.put`` into preregistered halo
+    objects (the freshly-extracted face already lives on a device, so the
+    plane travels device-to-device; oversized planes would chunk-stream
+    through the same rendezvous path)."""
     ranks = cluster.ranks
     n = len(ranks)
     bounds = _slab_bounds(u0.shape[0], n)
@@ -242,11 +246,13 @@ def run_cluster(u0: np.ndarray, iters: int, cluster) -> np.ndarray:
             if i > 0:
                 f = rt.hetero_object(shape=(s[1], s[2]), dtype=u0.dtype)
                 rt.run(lo_face, [(slab, "r"), (f, "w")])
-                r.put(i - 1, "jhi", f, on_done="jacobi_halo_done")
+                r.put(i - 1, "jhi", f, on_done="jacobi_halo_done",
+                      path="direct")
             if i < n - 1:
                 f = rt.hetero_object(shape=(s[1], s[2]), dtype=u0.dtype)
                 rt.run(hi_face, [(slab, "r"), (f, "w")])
-                r.put(i + 1, "jlo", f, on_done="jacobi_halo_done")
+                r.put(i + 1, "jlo", f, on_done="jacobi_halo_done",
+                      path="direct")
         for r in ranks:
             if r._jacobi["halos_expected"]:
                 assert r._jacobi["halo_evt"].wait(60), "halo exchange"

@@ -11,6 +11,7 @@ from repro.core.hetero_task import Access, HeteroTask, TaskState  # noqa: F401
 from repro.core.residency import (PLACEMENTS, DataGravityPolicy,  # noqa: F401
                                   LoadOnlyPolicy, PlacementPolicy,
                                   ResidencyLedger)
+from repro.core.progress import Lane, ProgressEngine  # noqa: F401
 from repro.core.runtime import Runtime, RuntimeConfig  # noqa: F401
 from repro.core.topology import (InterconnectModel,  # noqa: F401
                                  LinkEstimate, probe_runtime_links)

@@ -106,6 +106,14 @@ class Device(abc.ABC):
     @abc.abstractmethod
     def is_ready(self, handle: Any) -> bool: ...
 
+    def completion_waiter(self, handle: Any) -> Callable[[], Any]:
+        """Blocking ready-wait closure for an already-dispatched launch —
+        what the progress engine's per-device completion lane runs to
+        turn the handle into a completion event (the runtime never polls
+        ``is_ready`` in its compute workers anymore). Backends may
+        return a cheaper wait than full ``synchronize``."""
+        return lambda: self.synchronize(handle)
+
 
 def transfer(src_dev: Optional[Device], dst_dev: Device,
              dev_array: Any,

@@ -1,0 +1,180 @@
+"""Unified asynchronous progress engine (paper §3.2.1 + §4.1.3).
+
+The paper keeps communication progress decoupled from compute: control
+messages stay cheap even while large payloads stream, because nothing
+that makes progress ever blocks inside somebody else's loop. HPX and
+DiOMP attribute the same overlap wins to a dedicated progress/completion
+engine. This module is that engine, shared by every layer that used to
+run its own ad-hoc loop:
+
+  * the Runtime's per-device transfer queues  → ``("transfer", dev)`` lanes
+  * the Runtime's in-flight launch polling    → ``("complete", dev)`` lanes
+  * the distributed Rank's rendezvous stream  → ``("net-send", rank)`` lane
+  * the distributed Rank's stream completion  → ``("net-recv", rank)`` lane
+  * the simulated Cluster's per-link wires    → ``("link", src, dst)`` lanes
+
+A ``Lane`` is a serial execution context: one daemon thread draining a
+priority queue of jobs (FIFO within a priority level). Jobs post their
+result into an ``HFuture`` — the completion event — instead of making
+the producer wait. Because every lane is serial, state owned by a lane
+needs no locks: post a job to mutate it. Lanes are created lazily and
+typed by a ``(kind, key...)`` tuple, so an idle configuration spawns no
+threads.
+
+Completion events for device work use ``Lane.submit`` with a job that
+performs the (cheap, already-dispatched) blocking wait and then runs the
+continuation — a dedicated completion thread per device, never a poll
+loop in the compute worker. Device launches complete in FIFO order per
+device, which matches the per-device execution streams underneath.
+"""
+from __future__ import annotations
+
+import itertools
+import queue
+import threading
+from typing import Any, Callable, Dict, Optional, Tuple
+
+from repro.core.futures import HFuture
+
+LaneKey = Tuple[Any, ...]
+
+
+class Lane:
+    """One serial execution context: a named daemon thread draining a
+    priority queue. ``submit`` returns immediately; the job's completion
+    is posted to the returned future. Lower priority runs first, FIFO
+    within a priority level."""
+
+    __slots__ = ("name", "_q", "_seq", "_executing", "_thread", "_stopped",
+                 "jobs_done")
+
+    def __init__(self, name: str):
+        self.name = name
+        self._q: "queue.PriorityQueue" = queue.PriorityQueue()
+        self._seq = itertools.count()
+        self._executing = False
+        self._stopped = False
+        self.jobs_done = 0
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name=name)
+        self._thread.start()
+
+    def submit(self, fn: Callable[[], Any], fut: Optional[HFuture] = None,
+               priority: int = 0) -> Optional[HFuture]:
+        """Enqueue ``fn``; its result (or error) lands in ``fut`` when the
+        lane reaches it. ``fut=None`` posts fire-and-forget work."""
+        self._q.put((priority, next(self._seq), fn, fut))
+        return fut
+
+    def busy(self) -> bool:
+        """True while the lane holds queued or executing work. A job is
+        marked executing before it is popped off the queue's accounting,
+        so there is no idle-looking window mid-job."""
+        return self._executing or not self._q.empty()
+
+    def _run(self):
+        while True:
+            _prio, _seq, fn, fut = self._q.get()
+            if fn is None:
+                return
+            self._executing = True
+            try:
+                result = fn()
+            except BaseException as e:
+                if fut is not None:
+                    fut.set_error(e)
+                else:                      # pragma: no cover - diagnostics
+                    import traceback
+                    traceback.print_exc()
+            else:
+                if fut is not None:
+                    fut.set_result(result)
+            finally:
+                self.jobs_done += 1
+                self._executing = False
+
+    def stop(self, join_timeout: float = 5.0) -> None:
+        if self._stopped:
+            return
+        self._stopped = True
+        # inf priority: the sentinel sorts behind every queued job
+        self._q.put((float("inf"), next(self._seq), None, None))
+        self._thread.join(timeout=join_timeout)
+
+
+class ProgressEngine:
+    """Reactor over typed lanes. Layers ask for a lane by ``(kind, key)``
+    — ``("transfer", device_id)``, ``("net-send", rank)``, ``("link",
+    src, dst)`` — and get the same serial context every time; lanes are
+    created on first use. ``submit`` is the one-call sugar; ``complete``
+    posts a completion event: run ``waiter`` (a blocking ready-wait for
+    work that was already dispatched asynchronously) on the kind's
+    completion lane, then hand the result to ``callback``."""
+
+    def __init__(self, name: str = "progress"):
+        self.name = name
+        self._lanes: Dict[LaneKey, Lane] = {}
+        self._lock = threading.Lock()
+        self._shutdown = False
+
+    # -- lanes ---------------------------------------------------------
+    def lane(self, kind: str, *key: Any) -> Lane:
+        k = (kind,) + key
+        with self._lock:
+            ln = self._lanes.get(k)
+            if ln is None:
+                if self._shutdown:
+                    raise RuntimeError("progress engine is shut down")
+                tag = "-".join(str(p) for p in k)
+                ln = Lane(f"{self.name}-{tag}")
+                self._lanes[k] = ln
+            return ln
+
+    def submit(self, kind: str, key: Any, fn: Callable[[], Any],
+               fut: Optional[HFuture] = None,
+               priority: int = 0) -> Optional[HFuture]:
+        return self.lane(kind, key).submit(fn, fut, priority)
+
+    # -- completion events ---------------------------------------------
+    def complete(self, kind: str, key: Any, waiter: Callable[[], Any],
+                 callback: Callable[[Any, Optional[BaseException]], None]
+                 ) -> None:
+        """Post a completion event: the ``(kind, key)`` completion lane
+        runs ``waiter()`` (blocking until the already-dispatched work is
+        done) and then ``callback(result, error)``. The producer never
+        blocks — this is the dedicated completion thread the paper's
+        progress engine trades the per-call poll loop for. Events on one
+        lane fire in submission order (FIFO per device stream)."""
+
+        def job():
+            result, error = None, None
+            try:
+                result = waiter()
+            except BaseException as e:
+                error = e
+            callback(result, error)
+
+        self.lane(kind, key).submit(job)
+
+    # -- introspection / teardown --------------------------------------
+    def busy(self) -> bool:
+        with self._lock:
+            lanes = list(self._lanes.values())
+        return any(ln.busy() for ln in lanes)
+
+    def lanes_snapshot(self) -> Dict[str, Dict[str, Any]]:
+        with self._lock:
+            lanes = dict(self._lanes)
+        return {
+            "-".join(str(p) for p in k): {
+                "jobs_done": ln.jobs_done, "busy": ln.busy(),
+            }
+            for k, ln in sorted(lanes.items(), key=lambda kv: str(kv[0]))
+        }
+
+    def shutdown(self) -> None:
+        with self._lock:
+            self._shutdown = True
+            lanes = list(self._lanes.values())
+        for ln in lanes:
+            ln.stop()

@@ -72,8 +72,6 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-import itertools
-import queue
 import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
@@ -87,9 +85,11 @@ from repro.core.futures import HFuture
 from repro.core.hetero_object import HOST, HeteroObject
 from repro.core.hetero_task import HeteroTask, TaskState
 from repro.core.memory import RequestPool, StagingPool
+from repro.core.progress import ProgressEngine
 from repro.core.residency import PLACEMENTS, ResidencyLedger
 from repro.core.scheduler import SCHEDULERS, Scheduler
-from repro.core.topology import InterconnectModel, probe_runtime_links
+from repro.core.topology import (InterconnectModel, probe_link,
+                                 probe_runtime_links)
 
 
 @dataclasses.dataclass
@@ -112,6 +112,9 @@ class RuntimeConfig:
     # -- interconnect topology / message protocol (paper §3.2.3 + §4.2) --
     topology_probe: bool = True   # startup micro-probe seeds the model
     topology_probe_bytes: int = 64 << 10
+    # device pairs the startup host+ring probe did not cover are probed
+    # lazily, once, on their first real transfer (ROADMAP follow-up c)
+    lazy_probe: bool = True
     # distributed messages above this size switch from the eager
     # (monolithic) protocol to chunk-streamed rendezvous
     eager_threshold: int = 64 << 10
@@ -121,6 +124,12 @@ class RuntimeConfig:
     # chunk_bytes pins an explicit size instead (tests/benchmarks)
     chunk_target_ms: float = 4.0
     chunk_bytes: Optional[int] = None
+    # rendezvous sliding window: how many chunks the receiver lets the
+    # sender keep in flight per stream (credit-based flow control). None
+    # sizes the window from the measured bandwidth-delay product of the
+    # rank pair, clamped ≥ 2 so the pipeline is always sustained; an
+    # explicit int pins it (tests/benchmarks).
+    net_window: Optional[int] = None
 
 
 class Runtime:
@@ -159,12 +168,14 @@ class Runtime:
                        "bytes_d2d": 0, "prefetch_hits": 0,
                        "prefetch_misses": 0, "prefetch_stalls": 0}
         self._threads: List[threading.Thread] = []
-        # one priority transfer queue per device (paper §4.1.3,
-        # generalized): copies bound for different devices proceed
-        # independently, and within a device the next task's arguments
-        # (priority 1) outrank deeper prefetch staging (priority 2+)
-        self._xfer_qs: Dict[int, "queue.PriorityQueue"] = {}
-        self._xfer_seq = itertools.count()   # FIFO tiebreak within priority
+        # unified progress engine (core/progress.py): one reactor owns
+        # every asynchronous context this runtime needs — per-device
+        # transfer lanes (paper §4.1.3, priority queues: the next task's
+        # arguments outrank deeper prefetch staging), per-device launch
+        # completion lanes (in-flight retire without the old block_one
+        # polling loop), and — when a distributed Rank wraps this runtime
+        # — its net-send / net-recv lanes
+        self.engine = ProgressEngine(name="rt")
         self._start_workers()
 
     # ------------------------------------------------------------------
@@ -279,17 +290,16 @@ class Runtime:
         s["request_pool_misses"] = self.futures.misses
         s.update(self.residency.gauges())
         s["topology"] = self.topology.snapshot()
+        s["progress_lanes"] = self.engine.lanes_snapshot()
         return s
 
     def shutdown(self) -> None:
         with self._lock:
             self._shutdown = True
             self._work.notify_all()
-        for q_ in self._xfer_qs.values():
-            # inf priority: the sentinel sorts behind every queued transfer
-            q_.put((float("inf"), next(self._xfer_seq), None, None))
         for t in self._threads:
             t.join(timeout=5)
+        self.engine.shutdown()
 
     def __enter__(self):
         return self
@@ -548,6 +558,20 @@ class Runtime:
             # direct D2D: never materializes a host copy (jax arrays are
             # immutable, so the snapshot taken above stays valid even if the
             # source copy is concurrently evicted)
+            if (self.cfg.lazy_probe
+                    and not self.topology.measured(src_dev, device_id)):
+                # first use of a pair the startup host+ring probe skipped
+                # (ROADMAP follow-up c): seed from the measured two-hop
+                # path over host, then time one small real transfer so
+                # the estimate is link-local before the payload's own
+                # sample refines it
+                self.topology.seed_from_path(src_dev, device_id)
+                try:
+                    probe_link(self._device(src_dev),
+                               self._device(device_id), self.topology,
+                               self.cfg.topology_probe_bytes)
+                except Exception:   # probe failure must never block data
+                    pass
             self.residency.ensure_capacity(device_id, obj.nbytes,
                                            self._evict)
             dev_arr = device_api.transfer(self._device(src_dev),
@@ -590,35 +614,22 @@ class Runtime:
             th.start()
             self._threads.append(th)
         if self.cfg.transfer_thread:
+            # materialize the transfer lanes up front so a burst of first
+            # transfers never races lane creation with heavy traffic
             for d in self.devices:
-                q_: "queue.PriorityQueue" = queue.PriorityQueue()
-                self._xfer_qs[d.info.device_id] = q_
-                th = threading.Thread(
-                    target=self._transfer_worker, args=(q_,), daemon=True,
-                    name=f"repro-xfer-{d.info.device_id}")
-                th.start()
-                self._threads.append(th)
-
-    def _transfer_worker(self, q_: "queue.PriorityQueue"):
-        while True:
-            _prio, _seq, fn, fut = q_.get()
-            if fn is None:
-                return
-            try:
-                fut.set_result(fn())
-            except BaseException as e:   # pragma: no cover
-                fut.set_error(e)
+                self.engine.lane("transfer", d.info.device_id)
 
     def _async_transfer(self, device_id: int, fn: Callable,
                         priority: int = 0) -> HFuture:
-        """Run ``fn`` on ``device_id``'s transfer queue (or inline when the
-        transfer threads are disabled). Lower ``priority`` runs first —
+        """Run ``fn`` on ``device_id``'s transfer lane (or inline when the
+        transfer lanes are disabled). Lower ``priority`` runs first —
         deep prefetch staging (priority 2+) never delays the next task's
-        arguments (priority 1). Returns a pooled future."""
+        arguments (priority 1). Returns a pooled future; the completion
+        event fires through the future's done-callbacks."""
         fut = self.futures.acquire()
-        q_ = self._xfer_qs.get(device_id)
-        if q_ is not None:
-            q_.put((priority, next(self._xfer_seq), fn, fut))
+        if self.cfg.transfer_thread:
+            self.engine.submit("transfer", device_id, fn, fut,
+                               priority=priority)
         else:
             try:
                 fut.set_result(fn())
@@ -662,11 +673,33 @@ class Runtime:
         return task, dev, fut
 
     def _worker(self, device_hint: Optional[int]):
-        inflight: List[Tuple[HeteroTask, Any]] = []
+        """Per-device compute lane. Launches are asynchronous; their
+        retirement is a progress-engine completion event on the device's
+        ``("complete", dev)`` lane — the worker never polls in-flight
+        handles (the old block_one loop). ``gate`` counts this worker's
+        un-retired launches; at ``cfg.inflight`` the worker parks on the
+        runtime condition until a completion event frees a slot."""
         staged: "collections.deque" = collections.deque()  # prefetched tasks
         depth = max(1, self.cfg.prefetch_depth)
+        gate = {"n": 0}
+        async_mode = not self.cfg.sync_dispatch and self.cfg.inflight > 1
+
+        def retire(task, handle):
+            # runs on the completion lane: free the window slot first so
+            # the notify inside _finish wakes a worker that can launch
+            with self._lock:
+                gate["n"] -= 1
+            self._finish(task, result=handle)
+
         while True:
             pmap = None
+            item = None
+            with self._lock:
+                if self._shutdown:
+                    return
+                if async_mode and gate["n"] >= self.cfg.inflight:
+                    self._work.wait(timeout=self.cfg.poll_interval_s * 20)
+                    continue
             if staged:
                 task, dev, pmap = staged.popleft()
                 item = (task, dev)
@@ -681,10 +714,8 @@ class Runtime:
                         task.chosen_device = dev
                         self.scheduler.load[dev] += 1
             if item is None:
-                # poll in-flight completions; park if nothing to do
-                if inflight:
-                    self._poll_inflight(inflight, block_one=True)
-                    continue
+                # nothing runnable: park until a push or a completion
+                # event (retire → _finish) notifies the condition
                 with self._lock:
                     if self._shutdown:
                         return
@@ -706,29 +737,17 @@ class Runtime:
                     if nxt is None:
                         break
                     staged.append(nxt)
-            if self.cfg.sync_dispatch or self.cfg.inflight <= 1:
+            if not async_mode:
                 self._device(dev).synchronize(handle)
                 self._finish(task, result=handle)
             else:
-                inflight.append((task, handle))
-                if len(inflight) >= self.cfg.inflight:
-                    self._poll_inflight(inflight, block_one=True)
-
-    def _poll_inflight(self, inflight: List, block_one: bool = False):
-        still: List = []
-        finished = []
-        for task, handle in inflight:
-            if self._device(task.chosen_device).is_ready(handle):
-                finished.append((task, handle))
-            else:
-                still.append((task, handle))
-        if block_one and not finished and still:
-            task, handle = still.pop(0)
-            self._device(task.chosen_device).synchronize(handle)
-            finished.append((task, handle))
-        inflight[:] = still
-        for task, handle in finished:
-            self._finish(task, result=handle)
+                with self._lock:
+                    gate["n"] += 1
+                self.engine.complete(
+                    "complete", dev,
+                    waiter=self._device(dev).completion_waiter(handle),
+                    callback=lambda _r, _e, task=task, handle=handle:
+                    retire(task, handle))
 
     def _launch(self, task: HeteroTask, device_id: int,
                 prefetched: Optional[HFuture] = None):

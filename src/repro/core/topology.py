@@ -22,6 +22,8 @@ from __future__ import annotations
 import threading
 from typing import Dict, Optional, Tuple
 
+from repro.core.hetero_object import HOST
+
 # defaults before any sample arrives: a conservative PCIe-gen3-ish link.
 DEFAULT_BANDWIDTH = 8e9          # bytes/s
 DEFAULT_LATENCY = 20e-6          # seconds
@@ -147,6 +149,46 @@ class InterconnectModel:
             est.chunk_choice[key] = q
             return q
 
+    def measured(self, src: int, dst: int) -> bool:
+        """True once at least one real sample refined (src → dst)."""
+        with self._lock:
+            est = self._links.get((src, dst))
+            return est is not None and est.samples > 0
+
+    def seed_from_path(self, src: int, dst: int, via: int = HOST) -> bool:
+        """Seed an UNMEASURED (src → dst) link from the measured two-hop
+        path src → via → dst: bandwidth is the path's bottleneck, latency
+        the hops' sum (ROADMAP follow-up c — a first estimate better than
+        the global default, without probing all pairs at startup). The
+        seed does not count as a sample, so the first real transfer still
+        replaces it outright. Returns True when a seed was installed."""
+        with self._lock:
+            est = self._link(src, dst)
+            if est.samples > 0:
+                return False
+            up = self._links.get((src, via))
+            down = self._links.get((via, dst))
+            if up is None or down is None \
+                    or not (up.samples and down.samples):
+                return False
+            est.bandwidth = min(up.bandwidth, down.bandwidth)
+            est.latency = up.latency + down.latency
+            return True
+
+    def window_chunks(self, src: int, dst: int, chunk_bytes: int,
+                      lo: int = 2, hi: int = 16) -> int:
+        """Credit window for a chunk-streamed (src → dst) transfer: how
+        many chunks must be in flight to cover the link's bandwidth-delay
+        product (one round-trip of credits at the measured bandwidth),
+        plus one so the sender always has a chunk ready when a credit
+        returns. Clamped to [lo, hi]: ≥2 keeps the pipeline sustained
+        even on degenerate estimates, and the cap bounds receiver-side
+        landing memory."""
+        with self._lock:
+            est = self._link(src, dst)
+            bdp = est.bandwidth * 2.0 * est.latency
+        return int(min(max(bdp // max(chunk_bytes, 1) + 1, lo), hi))
+
     def penalty_bytes(self, src: int, dst: int, seconds: float,
                       lo: int = 64 << 10, hi: int = 1 << 20) -> int:
         """Byte-equivalent of ``seconds`` of queueing on the (src → dst)
@@ -168,6 +210,30 @@ class InterconnectModel:
                 }
                 for (src, dst), e in sorted(self._links.items())
             }
+
+
+def probe_link(src_dev, dst_dev, model: InterconnectModel,
+               nbytes: int = 64 << 10) -> None:
+    """Lazy first-use micro-probe of one device pair (ROADMAP follow-up
+    c): the startup probe covers host→device plus a device ring in O(n);
+    any pair it skipped gets ONE timed ``nbytes`` transfer here, the
+    moment the runtime first moves real data across it. The staging
+    upload onto the source device is not timed — only the src→dst hop
+    under measurement is."""
+    import time
+
+    import numpy as np
+
+    payload = np.ones(max(nbytes // 4, 1), np.float32)
+    staged = src_dev.upload(payload)
+    if hasattr(staged, "block_until_ready"):
+        staged.block_until_ready()
+    t0 = time.perf_counter()
+    moved = dst_dev.transfer_from(src_dev, staged)
+    if hasattr(moved, "block_until_ready"):
+        moved.block_until_ready()
+    model.observe(src_dev.info.device_id, dst_dev.info.device_id,
+                  payload.nbytes, time.perf_counter() - t0)
 
 
 def probe_runtime_links(model: InterconnectModel, devices,

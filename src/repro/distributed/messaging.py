@@ -24,20 +24,33 @@ in ``Rank.stats`` (``bytes_d2d`` vs ``bytes_staged``).
 Protocol split (paper §4.2.2–§4.2.3): payloads at or below
 ``RuntimeConfig.eager_threshold`` travel EAGERLY — one metadata message
 plus one monolithic payload message, with ≤512B payloads inlined in the
-metadata. Larger payloads switch to a RENDEZVOUS protocol: the sender
-announces the message (RTS), the receiver prepares a consumer-routed
-landing device and replies ready (CTS), and the sender then streams the
-payload in chunks sized from the measured bandwidth-delay product of the
-rank pair (``Cluster.topology``, refined from every delivery). Each
-arriving chunk is handed straight to the landing device's transfer queue,
-so the network receive of chunk k+1 overlaps the device upload of chunk k
-— the pipelining that lets large messages beat the monolithic path.
+metadata. Larger payloads (including oversized ``Rank.put`` bodies)
+switch to a RENDEZVOUS protocol: the sender announces the message (RTS),
+the receiver prepares a consumer-routed landing device and replies ready
+(CTS) carrying an initial CREDIT WINDOW sized from the link's measured
+bandwidth-delay product, and the sender streams the payload in chunks
+sized from the same measurements (``Cluster.topology``, refined from
+every delivery).
+
+Progress is completion-driven, never blocking (paper §5–6: control
+messages stay cheap while payloads stream). All sender-side streaming
+runs on the rank's ``net-send`` progress-engine lane — the message pump
+only parks payloads and forwards credits, so a large stream never
+head-of-line blocks unrelated messages. The credit window keeps ≥2
+chunks in flight per stream: each chunk the receiver finishes uploading
+returns one credit, and the sender's lane advances the stream the moment
+a credit arrives instead of waiting for the whole previous chunk's
+round trip. Arriving chunks are handed straight to the landing device's
+transfer lane (receive of chunk k+1 overlaps the upload of chunk k), and
+stream completion — waiting out the tail uploads and invoking the
+handler — runs on the rank's ``net-recv`` lane, off the pump.
 Host-staged chunks travel through pooled staging buffers that return to
 the sender's pool once the receiver's upload completes (the RDMA
 buffer-recycle analogue). ``Rank.stats`` records ``eager``/``rendezvous``
-message counts, ``chunks_out``/``chunks_in``, and ``overlap_bytes`` —
-chunk uploads that had fully completed before the last chunk arrived,
-i.e. copies hidden entirely behind the network.
+message counts, ``chunks_out``/``chunks_in``, ``max_window`` (most
+chunks ever in flight in one stream) and ``overlap_bytes`` — chunk
+uploads that had fully completed before the last chunk arrived, i.e.
+copies hidden entirely behind the network.
 
 On a real TPU pod the network step lowers to ICI collectives
 (see distributed/collectives.py); this layer is the host-side control plane
@@ -58,6 +71,7 @@ from repro.core import HeteroObject, Runtime, RuntimeConfig
 from repro.core.device_api import transfer as d2d_transfer
 from repro.core.futures import HFuture
 from repro.core.hetero_object import HOST
+from repro.core.progress import ProgressEngine
 from repro.core.topology import InterconnectModel
 from repro.distributed import handlers as H
 
@@ -69,6 +83,24 @@ MIN_CHUNK_BYTES = 64 << 10
 MAX_CHUNK_BYTES = 4 << 20
 _msg_ids = itertools.count()
 _FLUSH = object()            # pump wake-up sentinel (not a Message)
+
+# message classes (shared by the simulated wire's virtual channels and
+# the receive-side inbox ordering): control traffic never waits behind
+# payloads, eager payloads never wait behind a streamed bulk window
+PRIO_CONTROL = 0
+PRIO_EAGER = 1
+PRIO_BULK = 2
+_CONTROL_KINDS = frozenset({"cts", "ack", "credit", "get"})
+
+
+def msg_priority(msg: "Message", nbytes: int) -> int:
+    # a metadata message with its payload inlined (≤ INLINE_PAYLOAD_BYTES)
+    # is control-sized — it rides the control VC the way real fabrics
+    # send sub-MTU inline messages (paper §4.2.3 small-message path)
+    if nbytes == 0 or msg.inline is not None \
+            or msg.kind in _CONTROL_KINDS:
+        return PRIO_CONTROL
+    return PRIO_BULK if msg.kind == "chunk" else PRIO_EAGER
 
 _slab_updater_fn = None
 
@@ -92,7 +124,8 @@ def _slab_updater():
 @dataclasses.dataclass
 class Message:
     msg_id: int
-    # 'meta' | 'payload' | 'cts' | 'chunk' | 'put' | 'get' | 'ack'
+    # 'meta' | 'payload' | 'cts' | 'chunk' | 'credit' | 'put' | 'get'
+    # | 'ack'
     kind: str
     src: int
     dst: int
@@ -110,10 +143,16 @@ class Message:
     consumer_device: Optional[int] = None
     # -- rendezvous protocol fields --
     protocol: str = "eager"    # 'eager' | 'rdzv'
+    op: str = "send"           # what a rendezvous stream completes into:
+    #                            'send' (handler invocation) | 'put'
+    #                            (overwrite the keyed target object)
     seq: Optional[int] = None  # chunk index within a rendezvous stream
     offset: Optional[int] = None   # chunk start, in elements
     nchunks: Optional[int] = None
     total_bytes: Optional[int] = None
+    # credit-based flow control: the CTS carries the initial window (how
+    # many chunks may be in flight), each 'credit' message returns one
+    credits: int = 0
 
 
 class Rank:
@@ -124,21 +163,37 @@ class Rank:
         self.cluster = cluster
         self.rank = rank
         self.runtime = Runtime(rt_config or RuntimeConfig())
-        self.inbox: "queue.Queue[Optional[Message]]" = queue.Queue()
+        # priority inbox (receive-side virtual channels): control
+        # messages outrank eager payloads outrank bulk chunks, so a
+        # small message is never stuck behind a streamed window that
+        # already landed in the inbox; FIFO within a class
+        self.inbox: "queue.PriorityQueue" = queue.PriorityQueue()
+        self._inbox_seq = itertools.count()
         self.outgoing: List[Tuple[HFuture, Message, HeteroObject]] = []
         self._out_lock = threading.Lock()
         self._pending_meta: Dict[int, Message] = {}
-        # rendezvous bookkeeping: outgoing payloads parked until CTS,
-        # in-progress incoming reassembly state per msg_id, and streamed
-        # pool buffers awaiting the receiver's completion ack
-        self._rdzv_out: Dict[int, Tuple[Message, Any, int, bool]] = {}
+        # rendezvous bookkeeping: outgoing stream state (parked payload,
+        # window credits, send cursor) per msg_id — mutated ONLY on the
+        # net-send lane after the RTS — in-progress incoming reassembly
+        # state per msg_id, and streamed pool buffers awaiting the
+        # receiver's completion ack
+        self._rdzv_out: Dict[int, Dict[str, Any]] = {}
         self._rdzv_in: Dict[int, Dict[str, Any]] = {}
         self._rdzv_bufs: Dict[int, np.ndarray] = {}
-        # True while the pump is mid-flush or mid-handler: work extracted
+        # typed progress-engine lanes on the runtime's shared reactor:
+        # net-send streams rendezvous chunks (the pump never transmits a
+        # payload window itself), net-recv completes incoming streams
+        # (tail-upload waits + handler invocation, off the pump)
+        self._net_send = self.runtime.engine.lane("net-send", rank)
+        self._net_recv = self.runtime.engine.lane("net-recv", rank)
+        # >0 while any thread is mid-flush or mid-handler: work extracted
         # from the queues but not yet re-registered anywhere the barrier
         # can see (closes the idle-looking window between popping a
-        # message/send and its effects landing)
-        self._active = False
+        # message/send and its effects landing). A COUNTER, not a flag:
+        # eager sends flush inline on the caller thread, concurrently
+        # with the pump's own flush/handle cycle.
+        self._active = 0
+        self._active_lock = threading.Lock()
         self.objects: Dict[Any, HeteroObject] = {}   # global ptr -> object
         # handler name -> local device id: where this rank wants payloads
         # for that handler landed (consumer routing, set via route_to)
@@ -146,7 +201,8 @@ class Rank:
         self.stats = {"sent": 0, "received": 0, "bytes_out": 0,
                       "bytes_d2d": 0, "bytes_staged": 0,
                       "eager": 0, "rendezvous": 0,
-                      "chunks_out": 0, "chunks_in": 0, "overlap_bytes": 0}
+                      "chunks_out": 0, "chunks_in": 0, "overlap_bytes": 0,
+                      "credits_in": 0, "max_window": 0}
         self._stop = False
         self._thread = threading.Thread(target=self._pump, daemon=True,
                                         name=f"prema-rank{rank}")
@@ -186,8 +242,12 @@ class Rank:
         def on_ready(_):
             with self._out_lock:
                 self.outgoing.append((access, meta, obj))
-            # poke the pump so the flush happens now, not at the next poll
-            self.inbox.put(_FLUSH)
+            # flush inline: when the payload is already available (the
+            # common fast path) the message reaches the network on THIS
+            # thread — no pump wake-up on the latency path. Safe from any
+            # thread: extraction is serialized by _out_lock and in-flight
+            # work is accounted by the _active counter.
+            self._flush_outgoing()
             fut.set_result(None)
 
         access.add_done_callback(on_ready)
@@ -200,7 +260,11 @@ class Rank:
         reuses existing, pinned target memory — no receiver allocation).
         ``path='direct'`` ships the freshest device copy with no host
         staging on either side (consumer-routed: the payload lands on
-        ``consumer_device``, else a device already holding the target)."""
+        ``consumer_device``, else a device already holding the target).
+        Payloads above the eager threshold chunk-stream through the same
+        credit-windowed rendezvous path as large sends (ROADMAP follow-up
+        b) — the stream completes into the target object instead of a
+        handler allocation."""
         fut = HFuture()
         if path == "direct":
             access = self.runtime._request_device_view(data)
@@ -209,19 +273,38 @@ class Rank:
 
         def on_ready(_):
             used_path = path
+            pooled = False
+            thr = self.runtime.cfg.eager_threshold
             if path == "direct":
                 space, arr = access.get()
                 if space == HOST:          # no device copy: degrade
                     used_path = "host"
             else:
-                arr = np.array(access.get())
+                src = np.asarray(access.get())
+                if src.nbytes > thr and self.runtime.staging.enabled:
+                    arr = self.runtime.staging.acquire(src.shape, src.dtype)
+                    np.copyto(arr, src)
+                    pooled = True
+                else:
+                    arr = np.array(src)
                 data.release()
+            key = "bytes_d2d" if used_path == "direct" else "bytes_staged"
+            self.stats[key] += arr.nbytes
+            if arr.nbytes > thr:
+                meta = Message(msg_id=next(_msg_ids), kind="meta",
+                               src=self.rank, dst=dst, op="put",
+                               object_key=object_key, handler=on_done,
+                               path=used_path,
+                               consumer_device=consumer_device,
+                               payload_shape=tuple(arr.shape),
+                               payload_dtype=np.dtype(arr.dtype).str)
+                self._start_rendezvous(meta, arr, arr.nbytes, pooled)
+                fut.set_result(None)
+                return
             msg = Message(msg_id=next(_msg_ids), kind="put", src=self.rank,
                           dst=dst, object_key=object_key, payload=arr,
                           handler=on_done, path=used_path,
                           consumer_device=consumer_device)
-            key = "bytes_d2d" if used_path == "direct" else "bytes_staged"
-            self.stats[key] += arr.nbytes
             self.cluster.deliver(msg)
             self.stats["sent"] += 1
             self.stats["bytes_out"] += arr.nbytes
@@ -256,20 +339,56 @@ class Rank:
         directly instead of on the least-loaded fallback."""
         self.routes[handler_name] = device_id
 
+    def enqueue(self, item: Any, priority: int = PRIO_CONTROL) -> None:
+        """Post a message (or pump sentinel) to this rank's inbox at the
+        given virtual-channel priority; FIFO within a priority class."""
+        self.inbox.put((priority, next(self._inbox_seq), item))
+
+    def dispatch_control(self, msg: Message) -> bool:
+        """Network-layer fast dispatch: stream-advance control messages
+        (CTS, credits) post their job straight onto the net-send lane
+        that consumes them, skipping the pump hop entirely — one fewer
+        thread wake in the per-chunk credit loop, which is the loop's
+        critical path. Returns True when the message was consumed."""
+        if msg.kind == "cts" or msg.kind == "credit":
+            self._net_send.submit(
+                lambda mid=msg.msg_id, c=max(msg.credits, 1),
+                init=(msg.kind == "cts"):
+                self._advance_stream(mid, c, initial=init))
+            return True
+        return False
+
     # ------------------------------------------------------------------
     # pump
     # ------------------------------------------------------------------
+    def _busy_enter(self) -> None:
+        with self._active_lock:
+            self._active += 1
+
+    def _busy_exit(self) -> None:
+        with self._active_lock:
+            self._active -= 1
+
     def _flush_outgoing(self):
         ready = []
         with self._out_lock:
             still = []
             for access, meta, obj in self.outgoing:
                 if access.done():
-                    self._active = True   # visible before outgoing shrinks
+                    if not ready:
+                        self._busy_enter()   # visible before outgoing shrinks
                     ready.append((access, meta, obj))
                 else:
                     still.append((access, meta, obj))
             self.outgoing = still
+        if not ready:
+            return
+        try:
+            self._flush_ready(ready)
+        finally:
+            self._busy_exit()
+
+    def _flush_ready(self, ready) -> None:
         for access, meta, obj in ready:
             pooled = False
             if meta.path == "direct":
@@ -323,7 +442,9 @@ class Rank:
         signals CTS. Chunk size comes from the measured bandwidth-delay
         product of this rank pair (``Cluster.topology``). ``pooled`` marks
         a host payload staged in a StagingPool buffer — it is recycled
-        when the receiver acks stream completion."""
+        when the receiver acks stream completion. All later stream state
+        mutation happens on the net-send lane (CTS and credit arrivals
+        are forwarded there), so no lock guards it."""
         chunk_b = self.runtime.cfg.chunk_bytes
         if chunk_b is None:
             target_s = self.runtime.cfg.chunk_target_ms / 1e3
@@ -336,38 +457,73 @@ class Rank:
         meta.protocol = "rdzv"
         meta.nchunks = max((total_elems + elems - 1) // elems, 1)
         meta.total_bytes = nbytes
-        self._rdzv_out[meta.msg_id] = (meta, arr, elems, pooled)
+        self._rdzv_out[meta.msg_id] = {
+            "meta": meta, "flat": arr.reshape(-1), "arr": arr,
+            "elems": elems, "pooled": pooled,
+            "next_seq": 0,     # chunks handed to the network so far
+            "credits": 0,      # window slots currently available
+            "returned": 0,     # credits returned by completed uploads
+        }
         self.stats["rendezvous"] += 1
         self.stats["sent"] += 1
         self.cluster.deliver(meta)
 
-    def _stream_chunks(self, msg_id: int) -> None:
-        """CTS received: stream the parked payload in chunks — zero-copy
-        windows into the staged (pooled) host buffer, or on-device slices
-        for DIRECT payloads. The staged buffer itself stays parked until
-        the receiver's completion ack returns it to the pool."""
-        meta, arr, elems, pooled = self._rdzv_out.pop(msg_id)
-        flat = arr.reshape(-1)
-        if pooled:
-            self._rdzv_bufs[msg_id] = arr
-        for k in range(meta.nchunks):
+    def _advance_stream(self, msg_id: int, credits: int,
+                        initial: bool = False) -> None:
+        """Net-send lane only. Fold ``credits`` into the stream's window
+        and transmit every chunk the window now covers — the sender
+        advances on per-chunk CTS credits, never on completion of the
+        whole previous chunk, so ≥2 chunks stay in flight and the pump
+        thread never transmits a payload window itself. The initial CTS
+        grant opens the window; later credits also count as completed
+        uploads for the in-flight accounting."""
+        state = self._rdzv_out.get(msg_id)
+        if state is None:      # stream already fully handed to the network
+            return
+        state["credits"] += credits
+        if not initial:
+            state["returned"] += credits
+            self.stats["credits_in"] += credits
+        meta, flat, elems = state["meta"], state["flat"], state["elems"]
+        while state["credits"] > 0 and state["next_seq"] < meta.nchunks:
+            k = state["next_seq"]
             piece = flat[k * elems:(k + 1) * elems]
             chunk = Message(msg_id=msg_id, kind="chunk", src=self.rank,
                             dst=meta.dst, seq=k, offset=k * elems,
                             nchunks=meta.nchunks, payload=piece,
                             path=meta.path)
+            state["credits"] -= 1
+            state["next_seq"] = k + 1
             self.stats["chunks_out"] += 1
             self.stats["bytes_out"] += piece.nbytes
+            in_flight = state["next_seq"] - state["returned"]
+            if in_flight > self.stats["max_window"]:
+                self.stats["max_window"] = in_flight
             self.cluster.deliver(chunk)
+        if state["next_seq"] >= meta.nchunks:
+            # stream fully transmitted: drop the send state; a pooled
+            # staging buffer stays parked until the completion ack
+            if state["pooled"]:
+                self._rdzv_bufs[msg_id] = state["arr"]
+            del self._rdzv_out[msg_id]
 
     # -- rendezvous protocol (receiver side) ---------------------------
     def _prepare_rendezvous(self, meta: Message) -> None:
         """RTS received: pick the consumer-routed landing device, start
         allocating the flat landing slab ON that device (the allocation
         overlaps the CTS round-trip and the first chunk's network time),
-        and signal CTS."""
+        and signal CTS carrying the initial credit window — enough chunks
+        in flight to cover the link's measured bandwidth-delay product
+        (≥2, so the sender can always overlap chunk k+1's transmit with
+        chunk k's upload here)."""
         dev = self._landing_device(meta)
         rt = self.runtime
+        window = rt.cfg.net_window
+        if window is None:
+            chunk_b = meta.total_bytes // max(meta.nchunks, 1)
+            window = self.cluster.topology.window_chunks(
+                meta.src, self.rank, max(chunk_b, 1))
+        window = max(1, min(window, meta.nchunks))
         state = {
             "meta": meta,
             "dev": dev,
@@ -386,20 +542,23 @@ class Rank:
                 import jax.numpy as jnp
                 with jax.default_device(device.jax_device):
                     state["slab"] = jnp.zeros(total, dtype=np.dtype(dtype))
-            # FIFO transfer queue: the init lands before any chunk update
+            # FIFO transfer lane: the init lands before any chunk update
             rt._async_transfer(dev, init)
         self._rdzv_in[meta.msg_id] = state
         self.cluster.deliver(Message(msg_id=meta.msg_id, kind="cts",
-                                     src=self.rank, dst=meta.src))
+                                     src=self.rank, dst=meta.src,
+                                     credits=window))
 
     def _receive_chunk(self, msg: Message) -> None:
         """One chunk arrived (possibly out of order): hand it straight to
-        the landing device's transfer queue and return to the pump — the
+        the landing device's transfer lane and return to the pump — the
         next chunk's network receive overlaps this chunk's device copy.
         Each chunk is scattered into the preallocated slab with a DONATED
         dynamic_update_slice, so the per-chunk device cost is chunk-sized
         (an un-donated assembly would copy the whole slab per chunk, and
-        a concatenate at the end would re-copy the whole payload)."""
+        a concatenate at the end would re-copy the whole payload). When
+        the upload completes, one flow-control credit travels back to the
+        sender — the completion event that slides its window forward."""
         state = self._rdzv_in[msg.msg_id]
         rt, dev = self.runtime, state["dev"]
         payload, offset = msg.payload, msg.offset
@@ -425,20 +584,35 @@ class Rank:
             if hasattr(local, "block_until_ready"):
                 local.block_until_ready()
             return local
-        state["uploads"][msg.seq] = (rt._async_transfer(dev, fn),
-                                     payload.nbytes)
+        fut = rt._async_transfer(dev, fn)
+        state["uploads"][msg.seq] = (fut, payload.nbytes)
         state["arrived"] += 1
         self.stats["chunks_in"] += 1
+        if msg.nchunks > 1:
+            # credit returns the moment this chunk's device copy retires
+            # (fires on the transfer lane — never blocks the pump)
+            fut.add_done_callback(
+                lambda _f, mid=msg.msg_id, dst=msg.src:
+                self.cluster.deliver(Message(msg_id=mid, kind="credit",
+                                             src=self.rank, dst=dst,
+                                             credits=1)))
         if state["arrived"] == msg.nchunks:
-            self._finish_rendezvous(msg.msg_id, last_seq=msg.seq)
+            # stream complete: the tail-upload waits and the handler run
+            # move to the net-recv lane so the pump stays responsive; the
+            # _rdzv_in entry keeps the barrier covering the completion
+            self._net_recv.submit(
+                lambda mid=msg.msg_id, last=msg.seq:
+                self._finish_rendezvous(mid, last_seq=last))
 
     def _finish_rendezvous(self, msg_id: int, last_seq: int) -> None:
-        """All chunks arrived: account pipeline overlap, await the tail
-        device copies, and invoke the handler with a device-resident
-        hetero_object. The reassembly entry stays in ``_rdzv_in`` until
-        the handler has run — ``Cluster.barrier`` reads it as a busy
-        signal, and popping early would let the barrier pass while the
-        tail uploads (up to a whole chunk) are still in flight."""
+        """Net-recv lane: all chunks arrived — account pipeline overlap,
+        await the tail device copies, and complete the stream: invoke the
+        handler with a device-resident hetero_object for a 'send', or
+        overwrite the keyed target object for a rendezvous 'put'. The
+        reassembly entry stays in ``_rdzv_in`` until the completion ran —
+        ``Cluster.barrier`` reads it as a busy signal, and popping early
+        would let the barrier pass while the tail uploads (up to a whole
+        chunk) are still in flight."""
         state = self._rdzv_in[msg_id]
         try:
             meta, dev = state["meta"], state["dev"]
@@ -458,6 +632,21 @@ class Rank:
             else:   # non-jax Device backends (tests): plain host assembly
                 assembled = np.concatenate([np.asarray(p) for p in parts]) \
                     .reshape(meta.payload_shape)
+            if meta.op == "put":
+                # rendezvous put (ROADMAP follow-up b): the stream lands
+                # device-resident and becomes the target's only valid
+                # copy — no receiver-side host staging
+                target = self.objects.get(meta.object_key)
+                if target is not None:
+                    if isinstance(assembled, np.ndarray):
+                        assembled = self.runtime._device(dev).upload(
+                            assembled)
+                    self.runtime.rebind_device_copy(target, assembled, dev)
+                self.cluster.deliver(Message(msg_id=msg_id, kind="ack",
+                                             src=self.rank, dst=meta.src))
+                if meta.handler:
+                    self._invoke(meta, target)
+                return
             obj = self.runtime.adopt_device_array(assembled, dev)
             # completion ack: the sender recycles its parked pool buffer
             self.cluster.deliver(Message(msg_id=msg_id, kind="ack",
@@ -479,9 +668,25 @@ class Rank:
                 obj = self.runtime.hetero_object(arr)
                 self._invoke(msg, obj)
             else:
-                self._pending_meta[msg.msg_id] = msg
+                prior = self._pending_meta.pop(msg.msg_id, None)
+                if prior is not None and prior.kind == "payload":
+                    # the payload beat its metadata through the network
+                    # (control and data ride different virtual channels)
+                    obj = self._adopt_payload(prior, msg)
+                    self._invoke(msg, obj)
+                else:
+                    self._pending_meta[msg.msg_id] = msg
         elif msg.kind == "cts":
-            self._stream_chunks(msg.msg_id)
+            # window opened: stream on the net-send lane, not the pump —
+            # unrelated messages are never head-of-line blocked behind
+            # this stream's payload
+            self._net_send.submit(
+                lambda mid=msg.msg_id, c=max(msg.credits, 1):
+                self._advance_stream(mid, c, initial=True))
+        elif msg.kind == "credit":
+            self._net_send.submit(
+                lambda mid=msg.msg_id, c=max(msg.credits, 1):
+                self._advance_stream(mid, c))
         elif msg.kind == "chunk":
             self._receive_chunk(msg)
         elif msg.kind == "ack":
@@ -537,12 +742,17 @@ class Rank:
 
     def _landing_device(self, meta: Message) -> int:
         """Consumer-routed delivery: the sender's per-message
-        ``consumer_device`` hint wins, then this rank's ``route_to``
-        registration for the handler, then the handler's declared
-        device-type affinity, and finally the residency ledger's
+        ``consumer_device`` hint wins; for a rendezvous put, a device
+        already holding the target object comes next; then this rank's
+        ``route_to`` registration for the handler, then the handler's
+        declared device-type affinity, and finally the residency ledger's
         least-loaded device — never a hardwired device 0."""
         ids = {d.info.device_id for d in self.runtime.devices}
         pref = meta.consumer_device
+        if pref not in ids and meta.op == "put":
+            target = self.objects.get(meta.object_key)
+            if target is not None:
+                pref = next(iter(target.resident_devices()), None)
         if pref not in ids:      # absent or invalid hint: fall through
             pref = self.routes.get(meta.handler)
         return self.runtime.pick_landing_device(
@@ -568,30 +778,27 @@ class Rank:
 
     def _pump(self):
         while not self._stop:
+            self._flush_outgoing()
             try:
-                self._flush_outgoing()
-            finally:
-                self._active = False
-            try:
-                msg = self.inbox.get(timeout=0.001)
+                _prio, _seq, msg = self.inbox.get(timeout=0.001)
             except queue.Empty:
                 continue
             if msg is None:
                 return
             if msg is _FLUSH:
                 continue          # woken to flush outgoing; loop does it
-            self._active = True   # popped but effects not yet visible
+            self._busy_enter()    # popped but effects not yet visible
             try:
                 self._handle(msg)
             except BaseException:   # a bad message must not kill the rank
                 import traceback
                 traceback.print_exc()
             finally:
-                self._active = False
+                self._busy_exit()
 
     def shutdown(self):
         self._stop = True
-        self.inbox.put(None)
+        self.enqueue(None)
         self._thread.join(timeout=5)
         self.runtime.shutdown()
 
@@ -610,66 +817,158 @@ class HandlerContext:
 
 
 class Cluster:
-    """In-process rank set with a simulated network. ``latency_s`` and
-    ``bw_bytes_per_s`` let benchmarks model interconnect behaviour; the
-    'direct' path skips the host-staging cost the way GPU-aware MPI does.
+    """In-process rank set with a simulated cut-through network.
+    ``latency_s`` and ``bw_bytes_per_s`` let benchmarks model
+    interconnect behaviour; the 'direct' path skips the host-staging cost
+    the way GPU-aware MPI does.
+
+    Transmission is modeled AT THE LINK, not in the sender (ROADMAP
+    follow-up d): each directed (src, dst) pair with a nonzero simulated
+    delay gets its own ``("link", src, dst)`` lane on a cluster-wide
+    progress engine, which serializes that link's payloads — so chunk
+    k+1's transmit overlaps chunk k's receive-side upload across the
+    whole credit window, instead of the old store-and-forward model that
+    billed transmission in the sender's pump and kept exactly one chunk
+    in flight. Control messages (CTS, credits, acks — anything 0-byte)
+    ride a higher-priority virtual channel on the link, the way real
+    fabrics keep flow control out from behind bulk data.
 
     ``topology`` is the rank-pair ``InterconnectModel``: every
     payload-carrying delivery is timed into it, and the rendezvous
-    protocol sizes its chunks from the measured bandwidth-delay product
-    of the (src, dst) pair."""
+    protocol sizes its chunks and credit windows from the measured
+    bandwidth-delay product of the (src, dst) pair."""
+
+    _CONTROL_KINDS = frozenset({"cts", "ack", "credit", "get"})
 
     def __init__(self, n_ranks: int, rt_config: Optional[RuntimeConfig] = None,
                  latency_s: float = 0.0, bw_bytes_per_s: float = 0.0):
         self.latency_s = latency_s
         self.bw = bw_bytes_per_s
         self.topology = InterconnectModel()
+        self.net = ProgressEngine(name="net")
+        self._inflight = 0             # messages on a link lane right now
+        self._inflight_lock = threading.Lock()
+        # per-directed-link wire model: the perf_counter instant the wire
+        # is next free. Advanced by the EXACT modeled transmission time,
+        # so sleep overshoot never accumulates across a chunk stream
+        # (only each message's own delivery jitters, the wire schedule
+        # stays faithful). Written only from that link's serial lane.
+        self._wire_free: Dict[Tuple[int, int], float] = {}
         self.ranks = [Rank(self, r, rt_config) for r in range(n_ranks)]
 
     @staticmethod
-    def _delay(seconds: float) -> None:
-        """Precise simulated transmission time: coarse sleep for the bulk,
-        spin for the tail. time.sleep alone overshoots sub-millisecond
-        delays by ~1ms on Linux, which would bill every pipeline chunk a
-        phantom milli­second and invert the benchmark."""
-        end = time.perf_counter() + seconds
-        if seconds > 0.002:
-            time.sleep(seconds - 0.002)
-        while time.perf_counter() < end:
-            pass
+    def _sleep_until(deadline: float) -> None:
+        """Wait until a modeled delivery instant without burning a core:
+        coarse GIL-releasing sleep for the bulk, a yielding spin only for
+        the final ~150 µs. A full-duration spin would occupy a whole CPU
+        for every millisecond of simulated wire time — on small hosts
+        that starvation re-creates the very head-of-line blocking the
+        cut-through model removes."""
+        while True:
+            remaining = deadline - time.perf_counter()
+            if remaining <= 0:
+                return
+            if remaining > 150e-6:
+                time.sleep(remaining - 100e-6)
+            else:
+                time.sleep(0)          # sched_yield: precise, cooperative
+
+    def _priority(self, msg: Message, nbytes: int) -> int:
+        """Virtual channels on the simulated wire: control traffic first,
+        eager payloads next, bulk rendezvous chunks last — a small
+        message never queues behind a whole streamed window."""
+        if nbytes == 0 or msg.kind in self._CONTROL_KINDS:
+            return 0
+        return 2 if msg.kind == "chunk" else 1
 
     def deliver(self, msg: Message):
+        """Hand a message to the network. Never blocks the caller: when
+        the simulated link has a nonzero delay the message is queued on a
+        link lane (cut-through — the LINK serializes transmission, the
+        sender is free immediately); zero-delay messages land in the
+        destination inbox directly. Control traffic (priority 0) rides a
+        dedicated per-link control lane — the virtual channel real
+        fabrics use — so a credit or CTS is never stuck behind an
+        in-service bulk chunk; payload messages serialize on the wire's
+        ``_wire_free`` schedule, non-preemptively, priority-ordered."""
         nbytes = msg.payload.nbytes if msg.payload is not None else \
             (len(msg.inline) if msg.inline is not None else 0)
-        t0 = time.perf_counter()
-        if self.latency_s or (self.bw and msg.payload is not None):
-            delay = self.latency_s
-            if self.bw and msg.payload is not None:
-                delay += msg.payload.nbytes / self.bw
-            if delay > 0:
-                self._delay(delay)
-        self.ranks[msg.dst].inbox.put(msg)
-        if nbytes:
-            self.topology.observe(msg.src, msg.dst, nbytes,
-                                  time.perf_counter() - t0)
+        delay = self.latency_s
+        if self.bw and nbytes:
+            delay += nbytes / self.bw
+        dst = self.ranks[msg.dst]
+        if delay <= 0:
+            t0 = time.perf_counter()
+            if not dst.dispatch_control(msg):
+                dst.enqueue(msg, msg_priority(msg, nbytes))
+            if nbytes:
+                self.topology.observe(msg.src, msg.dst, nbytes,
+                                      time.perf_counter() - t0)
+            return
+        prio = msg_priority(msg, nbytes)
+        link = (msg.src, msg.dst)
+        if prio == PRIO_CONTROL and delay <= 100e-6:
+            # control VC, latency-only and tiny: deliver inline in the
+            # calling thread. Waking an idle per-link control lane costs
+            # several hundred µs on a busy host — far more than the
+            # simulated latency itself — and would also let a payload
+            # overtake its own metadata.
+            self._sleep_until(time.perf_counter() + delay)
+            if not dst.dispatch_control(msg):
+                dst.enqueue(msg, prio)
+            return
+        with self._inflight_lock:
+            self._inflight += 1
+
+        def transmit():
+            try:
+                t0 = time.perf_counter()
+                if prio > 0:
+                    # payload: occupy the wire for exactly `delay`
+                    start = max(t0, self._wire_free.get(link, 0.0))
+                    t_deliver = start + delay
+                    self._wire_free[link] = t_deliver
+                else:
+                    # control VC: latency only, no wire occupancy
+                    t_deliver = t0 + delay
+                self._sleep_until(t_deliver)
+                if not dst.dispatch_control(msg):
+                    dst.enqueue(msg, prio)
+                if nbytes:
+                    self.topology.observe(msg.src, msg.dst, nbytes,
+                                          time.perf_counter() - t0)
+            finally:
+                with self._inflight_lock:
+                    self._inflight -= 1
+
+        lane_kind = "link" if prio > 0 else "linkctl"
+        self.net.submit(lane_kind, link, transmit, priority=prio)
 
     def _rank_busy(self, r: Rank) -> bool:
         with r._out_lock:
             if r.outgoing:
                 return True
         return (not r.inbox.empty() or r._active
-                or bool(r._rdzv_out) or bool(r._rdzv_in))
+                or bool(r._rdzv_out) or bool(r._rdzv_in)
+                or r._net_send.busy() or r._net_recv.busy())
+
+    def _net_busy(self) -> bool:
+        with self._inflight_lock:
+            return self._inflight > 0
 
     def barrier(self, timeout: float = 60.0):
-        """Wait until every rank's message work has drained, then barrier
-        the runtimes. Requires TWO consecutive all-idle sweeps: a pump
-        marks itself ``_active`` before its delivery lands in a peer's
-        inbox, so anything in flight during sweep one is visible (inbox
-        or _active) to sweep two."""
+        """Wait until every rank's message work has drained — inboxes,
+        pump activity, rendezvous state, net-send/net-recv lanes, and
+        messages in flight on the simulated links — then barrier the
+        runtimes. Requires TWO consecutive all-idle sweeps: every handoff
+        (pump → lane → link → inbox) marks its next stage busy before the
+        previous one goes idle, so anything in flight during sweep one is
+        visible somewhere by sweep two."""
         deadline = time.time() + timeout
         idle_sweeps = 0
         while idle_sweeps < 2:
-            if any(self._rank_busy(r) for r in self.ranks):
+            if self._net_busy() \
+                    or any(self._rank_busy(r) for r in self.ranks):
                 idle_sweeps = 0
                 if time.time() > deadline:
                     raise TimeoutError("cluster barrier timeout")
@@ -682,6 +981,7 @@ class Cluster:
     def shutdown(self):
         for r in self.ranks:
             r.shutdown()
+        self.net.shutdown()
 
     def __enter__(self):
         return self

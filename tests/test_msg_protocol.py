@@ -126,8 +126,12 @@ class _ReorderingCluster(Cluster):
 
 
 def test_out_of_order_chunk_arrival_reassembles():
+    # net_window=4 opens the whole stream's window up front: the
+    # reordering cluster withholds every chunk until the last is sent,
+    # which per-chunk credits would otherwise (correctly) never allow
     cfg = RuntimeConfig(memory_capacity=1 << 28,
-                        eager_threshold=64 << 10, chunk_bytes=128 << 10)
+                        eager_threshold=64 << 10, chunk_bytes=128 << 10,
+                        net_window=4)
     c = _ReorderingCluster.__new__(_ReorderingCluster)
     c._held = {}
     Cluster.__init__(c, 2, cfg)
@@ -267,6 +271,73 @@ def test_get_reply_is_consumer_routed(cluster):
     assert _wait_for("obj")
     assert _received["obj"].resident_devices() == {1}
     np.testing.assert_allclose(_received["data"], 5.0)
+
+
+# ---------------------------------------------------------------------------
+# oversized put travels the rendezvous path (ROADMAP follow-up b)
+# ---------------------------------------------------------------------------
+
+def test_oversized_put_chunk_streams_through_rendezvous(cluster):
+    r0, r1 = cluster.ranks
+    target = r1.runtime.hetero_object(
+        np.zeros((1 << 17,), np.float32))            # 512 KB > threshold
+    r1.register_object("big_tgt", target)
+    data = np.arange(1 << 17, dtype=np.float32)
+    src = r0.runtime.hetero_object(data.copy())
+    r0.put(1, "big_tgt", src, on_done="proto_done")
+    assert _wait_for("done")
+    cluster.barrier()
+    np.testing.assert_array_equal(target.get(), data)
+    s = r0.stats
+    assert s["rendezvous"] == 1, s                   # not a monolithic put
+    assert s["chunks_out"] == 4                      # 512 KB / 128 KB
+    assert cluster.ranks[1].stats["chunks_in"] == 4
+
+
+def test_oversized_put_recycles_pooled_buffer_on_ack(cluster):
+    r0, r1 = cluster.ranks
+    target = r1.runtime.hetero_object(np.zeros((1 << 17,), np.float32))
+    r1.register_object("big_tgt2", target)
+    src = r0.runtime.hetero_object(np.ones((1 << 17,), np.float32))
+    r0.put(1, "big_tgt2", src, on_done="proto_done")
+    assert _wait_for("done")
+    cluster.barrier()
+    deadline = time.time() + 10
+    while r0._rdzv_bufs and time.time() < deadline:
+        time.sleep(0.005)
+    assert not r0._rdzv_bufs          # ack arrived, buffer released
+    np.testing.assert_allclose(target.get(), 1.0)
+
+
+def test_small_put_stays_eager(cluster):
+    r0, r1 = cluster.ranks
+    target = r1.runtime.hetero_object(np.zeros((32,), np.float32))
+    r1.register_object("small_tgt", target)
+    src = r0.runtime.hetero_object(np.full((32,), 7.0, np.float32))
+    r0.put(1, "small_tgt", src, on_done="proto_done")
+    assert _wait_for("done")
+    assert r0.stats["rendezvous"] == 0
+    np.testing.assert_allclose(target.get(), 7.0)
+
+
+def test_oversized_direct_put_lands_consumer_routed(cluster):
+    rt0, rt1 = cluster.ranks[0].runtime, cluster.ranks[1].runtime
+    if len(rt1.devices) < 2:
+        pytest.skip("needs >= 2 (virtual) devices")
+    target = rt1.hetero_object(np.zeros((1 << 17,), np.float32))
+    cluster.ranks[1].register_object("big_tgt3", target)
+    src = rt0.hetero_object(np.full((1 << 17,), 3.0, np.float32))
+    rt0.run(lambda v: v * 2.0, [(src, "rw")])   # leaves a device copy
+    rt0.barrier()
+    staged0 = cluster.ranks[1].stats["bytes_staged"]
+    cluster.ranks[0].put(1, "big_tgt3", src, on_done="proto_done",
+                         path="direct", consumer_device=1)
+    assert _wait_for("done")
+    cluster.barrier()
+    assert target.resident_devices() == {1}
+    np.testing.assert_allclose(target.get(), 6.0)
+    assert cluster.ranks[0].stats["rendezvous"] == 1
+    assert cluster.ranks[1].stats["bytes_staged"] == staged0
 
 
 # ---------------------------------------------------------------------------
