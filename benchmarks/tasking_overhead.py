@@ -69,7 +69,8 @@ LADDER = [
 LADDER_BY_NAME = dict(LADDER)
 
 # rungs with their own workload/measurement, appended after the ladder
-EXTRA_RUNGS = ["SCHED-Locality", "MSG-Pipeline", "MSG-HOL"]
+EXTRA_RUNGS = ["SCHED-Locality", "MSG-Pipeline", "MSG-HOL",
+               "MSG-Congestion"]
 
 # subset of Runtime.stats() recorded per rung in the JSON report
 _REPORT_KEYS = ("staging_hits", "staging_misses", "request_pool_hits",
@@ -157,6 +158,17 @@ def bench_msg_hol(samples: int = 40) -> Dict:
     pre-engine pump serialized every small message behind the stream."""
     import msgrate   # benchmarks/ is on sys.path when run as a script
     return msgrate.run_hol(samples=samples)
+
+
+def bench_msg_congestion(samples: int = 30) -> Dict:
+    """MSG-Congestion rung: adaptive vs pinned credit windows against an
+    artificially slowed receiver transfer lane, with the control VC
+    billed in both arms (finite drain rate — credit chatter costs
+    simulated time). Reports small-message HOL p50 vs the uncontended
+    baseline, large-stream goodput for both windows, and the adaptation
+    evidence (window_adjusts / credits_deferred / window_min)."""
+    import msgrate   # benchmarks/ is on sys.path when run as a script
+    return msgrate.run_congestion(samples=samples)
 
 
 def bench_config(name: str, overrides: Dict, n: int, iters: int,
@@ -256,6 +268,23 @@ def main(argv=None):
               f"{row['p50_loaded_us']:.1f},x{row['ratio']:.3f}")
         print(f"figHOL_MSG-HOL_summary,,window{row['max_window']}_"
               f"chunks{row['stream_chunks']}")
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(row, f, indent=2)
+        return
+    if args.only == "MSG-Congestion":
+        row = bench_msg_congestion(samples=max(args.iters, 20))
+        print(f"figCONG_MSG-Congestion_uncontended_{row['small_bytes']},"
+              f"{row['p50_uncontended_us']:.1f},")
+        for label in ("adaptive", "pinned"):
+            a = row[label]
+            print(f"figCONG_MSG-Congestion_{label}_{row['small_bytes']},"
+                  f"{a['p50_us']:.1f},goodput{a['goodput_MBps']}MBps_"
+                  f"ctrl{a['ctrl_msgs']}")
+        print(f"figCONG_MSG-Congestion_summary,,"
+              f"hol_x{row['hol_ratio_adaptive']}_"
+              f"goodput_x{row['goodput_ratio']}_"
+              f"wmin{row['adaptive']['window_min']}")
         if args.json:
             with open(args.json, "w") as f:
                 json.dump(row, f, indent=2)

@@ -26,17 +26,27 @@ performs the (cheap, already-dispatched) blocking wait and then runs the
 continuation — a dedicated completion thread per device, never a poll
 loop in the compute worker. Device launches complete in FIFO order per
 device, which matches the per-device execution streams underneath.
+
+Errors from fire-and-forget jobs (no future to carry them) are routed to
+the engine's error sink instead of vanishing on stderr: the owning
+``ProgressEngine`` records them, surfaces the count through
+``Runtime.stats()["progress_errors"]``, and in strict mode re-raises the
+first one from ``check()`` (called by ``Runtime.barrier``) so tests fail
+loudly instead of hanging on a silently-dead continuation.
 """
 from __future__ import annotations
 
 import itertools
 import queue
 import threading
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.core.futures import HFuture
 
 LaneKey = Tuple[Any, ...]
+
+# error sink keeps a bounded trace of swallowed asynchronous errors
+_MAX_SINK_ERRORS = 100
 
 
 class Lane:
@@ -45,16 +55,28 @@ class Lane:
     is posted to the returned future. Lower priority runs first, FIFO
     within a priority level."""
 
-    __slots__ = ("name", "_q", "_seq", "_executing", "_thread", "_stopped",
-                 "jobs_done")
+    __slots__ = ("name", "_q", "_seq", "_pending", "_pending_lock",
+                 "_executing", "_thread", "_stopped", "jobs_done",
+                 "on_error")
 
-    def __init__(self, name: str):
+    def __init__(self, name: str,
+                 on_error: Optional[Callable[[str, BaseException], None]]
+                 = None):
         self.name = name
         self._q: "queue.PriorityQueue" = queue.PriorityQueue()
         self._seq = itertools.count()
+        # jobs accepted but not yet finished (queued + executing). The
+        # counter moves at submit time and in the job's finally clause,
+        # so there is no popped-but-unmarked window in which a mid-job
+        # lane looks idle (the old `_executing`-only accounting was set
+        # AFTER PriorityQueue.get() returned, and Cluster.barrier's
+        # all-idle sweep could slip through that gap).
+        self._pending = 0
+        self._pending_lock = threading.Lock()
         self._executing = False
         self._stopped = False
         self.jobs_done = 0
+        self.on_error = on_error
         self._thread = threading.Thread(target=self._run, daemon=True,
                                         name=name)
         self._thread.start()
@@ -62,15 +84,41 @@ class Lane:
     def submit(self, fn: Callable[[], Any], fut: Optional[HFuture] = None,
                priority: int = 0) -> Optional[HFuture]:
         """Enqueue ``fn``; its result (or error) lands in ``fut`` when the
-        lane reaches it. ``fut=None`` posts fire-and-forget work."""
-        self._q.put((priority, next(self._seq), fn, fut))
+        lane reaches it. ``fut=None`` posts fire-and-forget work.
+        Submitting to a stopped lane raises ``RuntimeError`` (and resolves
+        ``fut`` with that error first) — the old behaviour enqueued the
+        job behind the infinite-priority stop sentinel, so it never ran
+        and its future never resolved (a silent hang). The check and the
+        enqueue share ``stop()``'s lock: a submit that wins the race
+        lands its job BEFORE the sentinel (which sorts behind every
+        queued job), so an accepted job always runs."""
+        with self._pending_lock:
+            if self._stopped:
+                err = RuntimeError(f"lane {self.name} is stopped")
+                if fut is not None:
+                    fut.set_error(err)
+                raise err
+            self._pending += 1
+            self._q.put((priority, next(self._seq), fn, fut))
         return fut
 
     def busy(self) -> bool:
-        """True while the lane holds queued or executing work. A job is
-        marked executing before it is popped off the queue's accounting,
-        so there is no idle-looking window mid-job."""
-        return self._executing or not self._q.empty()
+        """True while the lane holds accepted-but-unfinished work. Backed
+        by the pending counter (moved at submit / job-finally), so a job
+        that has been popped off the queue but not yet started still
+        counts — no idle-looking window mid-handoff."""
+        return self._pending > 0
+
+    def pending(self) -> int:
+        """Accepted-but-unfinished jobs (queued + executing)."""
+        return self._pending
+
+    def backlog(self) -> int:
+        """Jobs waiting behind the currently-executing one — the queue
+        depth the adaptive flow controller feeds on (a lane with one
+        in-service job and nothing queued is draining at line rate; a
+        positive backlog means arrivals outpace the drain)."""
+        return max(self._pending - (1 if self._executing else 0), 0)
 
     def _run(self):
         while True:
@@ -83,6 +131,8 @@ class Lane:
             except BaseException as e:
                 if fut is not None:
                     fut.set_error(e)
+                elif self.on_error is not None:
+                    self.on_error(self.name, e)
                 else:                      # pragma: no cover - diagnostics
                     import traceback
                     traceback.print_exc()
@@ -92,13 +142,16 @@ class Lane:
             finally:
                 self.jobs_done += 1
                 self._executing = False
+                with self._pending_lock:
+                    self._pending -= 1
 
     def stop(self, join_timeout: float = 5.0) -> None:
-        if self._stopped:
-            return
-        self._stopped = True
-        # inf priority: the sentinel sorts behind every queued job
-        self._q.put((float("inf"), next(self._seq), None, None))
+        with self._pending_lock:     # atomic with submit's check+enqueue
+            if self._stopped:
+                return
+            self._stopped = True
+            # inf priority: the sentinel sorts behind every queued job
+            self._q.put((float("inf"), next(self._seq), None, None))
         self._thread.join(timeout=join_timeout)
 
 
@@ -109,13 +162,50 @@ class ProgressEngine:
     created on first use. ``submit`` is the one-call sugar; ``complete``
     posts a completion event: run ``waiter`` (a blocking ready-wait for
     work that was already dispatched asynchronously) on the kind's
-    completion lane, then hand the result to ``callback``."""
+    completion lane, then hand the result to ``callback``.
 
-    def __init__(self, name: str = "progress"):
+    ``strict=True`` turns the error sink into a tripwire: ``check()``
+    re-raises the first swallowed fire-and-forget error (tests call it
+    through ``Runtime.barrier``)."""
+
+    def __init__(self, name: str = "progress", strict: bool = False):
         self.name = name
+        self.strict = strict
         self._lanes: Dict[LaneKey, Lane] = {}
         self._lock = threading.Lock()
         self._shutdown = False
+        self._errors: List[Tuple[str, BaseException]] = []
+
+    # -- error sink ----------------------------------------------------
+    def _record_error(self, lane_name: str, exc: BaseException) -> None:
+        with self._lock:
+            self._errors.append((lane_name, exc))
+            del self._errors[:-_MAX_SINK_ERRORS]
+        if not self.strict:                # keep the stderr trace too
+            import traceback
+            traceback.print_exception(type(exc), exc, exc.__traceback__)
+
+    def error_count(self) -> int:
+        with self._lock:
+            return len(self._errors)
+
+    def errors_snapshot(self) -> List[str]:
+        with self._lock:
+            return [f"{lane}: {type(exc).__name__}: {exc}"
+                    for lane, exc in self._errors]
+
+    def check(self) -> None:
+        """Strict mode: re-raise the first swallowed asynchronous error.
+        A no-op when not strict (the sink still counts them)."""
+        if not self.strict:
+            return
+        with self._lock:
+            first = self._errors[0] if self._errors else None
+        if first is not None:
+            lane, exc = first
+            raise RuntimeError(
+                f"progress engine {self.name}: swallowed error on lane "
+                f"{lane}") from exc
 
     # -- lanes ---------------------------------------------------------
     def lane(self, kind: str, *key: Any) -> Lane:
@@ -126,9 +216,15 @@ class ProgressEngine:
                 if self._shutdown:
                     raise RuntimeError("progress engine is shut down")
                 tag = "-".join(str(p) for p in k)
-                ln = Lane(f"{self.name}-{tag}")
+                ln = Lane(f"{self.name}-{tag}", on_error=self._record_error)
                 self._lanes[k] = ln
             return ln
+
+    def peek(self, kind: str, *key: Any) -> Optional[Lane]:
+        """The ``(kind, key)`` lane if it already exists — without
+        spawning one (introspection / fast-path checks)."""
+        with self._lock:
+            return self._lanes.get((kind,) + key)
 
     def submit(self, kind: str, key: Any, fn: Callable[[], Any],
                fut: Optional[HFuture] = None,

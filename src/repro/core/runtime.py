@@ -126,10 +126,17 @@ class RuntimeConfig:
     chunk_bytes: Optional[int] = None
     # rendezvous sliding window: how many chunks the receiver lets the
     # sender keep in flight per stream (credit-based flow control). None
-    # sizes the window from the measured bandwidth-delay product of the
-    # rank pair, clamped ≥ 2 so the pipeline is always sustained; an
-    # explicit int pins it (tests/benchmarks).
+    # runs the ADAPTIVE controller: the window starts at the measured
+    # bandwidth-delay product of the rank pair and adapts mid-stream to
+    # the receiver's drain rate (transfer-lane backlog halves it, min 1;
+    # an empty lane widens it back toward the BDP ceiling). An explicit
+    # int pins the window and bypasses adaptation (tests/benchmarks).
     net_window: Optional[int] = None
+    # strict asynchronous-error mode: errors swallowed by fire-and-forget
+    # progress-lane jobs or distributed pump handlers are re-raised at
+    # the next barrier instead of only being counted
+    # (stats()["progress_errors"] / Rank.stats["handler_errors"])
+    strict_errors: bool = False
 
 
 class Runtime:
@@ -175,7 +182,8 @@ class Runtime:
         # completion lanes (in-flight retire without the old block_one
         # polling loop), and — when a distributed Rank wraps this runtime
         # — its net-send / net-recv lanes
-        self.engine = ProgressEngine(name="rt")
+        self.engine = ProgressEngine(name="rt",
+                                     strict=self.cfg.strict_errors)
         self._start_workers()
 
     # ------------------------------------------------------------------
@@ -281,6 +289,9 @@ class Runtime:
                 if not self._work.wait(timeout=remaining):
                     raise TimeoutError(
                         f"barrier: {self._tasks_pending} tasks pending")
+        # strict mode: a swallowed fire-and-forget progress error fails
+        # the barrier instead of leaving a silently-dead continuation
+        self.engine.check()
 
     def stats(self) -> Dict[str, Any]:
         s = dict(self._stats)
@@ -291,6 +302,7 @@ class Runtime:
         s.update(self.residency.gauges())
         s["topology"] = self.topology.snapshot()
         s["progress_lanes"] = self.engine.lanes_snapshot()
+        s["progress_errors"] = self.engine.error_count()
         return s
 
     def shutdown(self) -> None:

@@ -32,6 +32,14 @@ DEFAULT_LATENCY = 20e-6          # seconds
 _LATENCY_SAMPLE_BYTES = 4 << 10
 _MIN_SECONDS = 1e-9
 
+# adaptive credit-window controller (AIMD): the receiver's transfer-lane
+# queue depth and landing-slab occupancy arrive with every credit; a
+# backlog at or above WINDOW_BACKLOG_DEPTH chunks — or landing slabs
+# holding more than WINDOW_SLAB_LIMIT bytes — halves the window (never
+# below 1), an empty queue widens it by one chunk toward the BDP ceiling.
+WINDOW_BACKLOG_DEPTH = 2
+WINDOW_SLAB_LIMIT = 32 << 20
+
 
 class LinkEstimate:
     """EWMA bandwidth/latency for one directed (src, dst) link.
@@ -41,7 +49,7 @@ class LinkEstimate:
     blended 3:1 with the guess."""
 
     __slots__ = ("bandwidth", "latency", "samples", "bw_samples",
-                 "lat_samples", "chunk_choice")
+                 "lat_samples", "chunk_choice", "window_choice")
 
     def __init__(self, bandwidth: float = DEFAULT_BANDWIDTH,
                  latency: float = DEFAULT_LATENCY):
@@ -53,6 +61,9 @@ class LinkEstimate:
         # sticky chunk-size choice per (target_s, lo, hi) — see
         # InterconnectModel.chunk_bytes hysteresis
         self.chunk_choice: Dict[Tuple[float, int, int], int] = {}
+        # adaptive credit-window controller state (window_chunks with
+        # receiver feedback); None until the first adaptive decision
+        self.window_choice: Optional[int] = None
 
     def cost_s(self, nbytes: int) -> float:
         """Predicted transfer time: latency + nbytes / bandwidth."""
@@ -176,18 +187,62 @@ class InterconnectModel:
             return True
 
     def window_chunks(self, src: int, dst: int, chunk_bytes: int,
-                      lo: int = 2, hi: int = 16) -> int:
-        """Credit window for a chunk-streamed (src → dst) transfer: how
-        many chunks must be in flight to cover the link's bandwidth-delay
-        product (one round-trip of credits at the measured bandwidth),
-        plus one so the sender always has a chunk ready when a credit
-        returns. Clamped to [lo, hi]: ≥2 keeps the pipeline sustained
-        even on degenerate estimates, and the cap bounds receiver-side
-        landing memory."""
+                      lo: int = 2, hi: int = 16,
+                      queue_depth: Optional[int] = None,
+                      slab_bytes: Optional[int] = None) -> int:
+        """Credit window for a chunk-streamed (src → dst) transfer.
+
+        Without feedback (``queue_depth``/``slab_bytes`` both None) this
+        is the static BDP sizing: how many chunks must be in flight to
+        cover the link's bandwidth-delay product (one round-trip of
+        credits at the measured bandwidth), plus one so the sender always
+        has a chunk ready when a credit returns. Clamped to [lo, hi]: ≥2
+        keeps the pipeline sustained even on degenerate estimates, and
+        the cap bounds receiver-side landing memory.
+
+        With feedback it is a CONTROLLER (AIMD), stepped on every credit
+        the receiver considers — mid-stream, not just at CTS: a
+        transfer-lane backlog of ``WINDOW_BACKLOG_DEPTH``+ chunks (or
+        landing slabs above ``WINDOW_SLAB_LIMIT`` bytes) halves the
+        window, never below 1 — the receiver is the bottleneck, and
+        piling more chunks into its queue only grows latency for
+        everything sharing the lane; an empty queue (the receiver drains
+        ahead of arrival) widens it by one chunk back toward the BDP
+        ceiling. The controller state is per directed link, so concurrent
+        streams on one link share (and jointly adapt) the window."""
         with self._lock:
             est = self._link(src, dst)
             bdp = est.bandwidth * 2.0 * est.latency
-        return int(min(max(bdp // max(chunk_bytes, 1) + 1, lo), hi))
+            bdp_win = int(min(max(bdp // max(chunk_bytes, 1) + 1, lo), hi))
+            if queue_depth is None and slab_bytes is None:
+                return bdp_win
+            cur = est.window_choice
+            if cur is None:
+                cur = bdp_win
+            backed_up = (queue_depth or 0) >= WINDOW_BACKLOG_DEPTH \
+                or (slab_bytes or 0) > WINDOW_SLAB_LIMIT
+            if backed_up:
+                cur = max(cur // 2, 1)           # multiplicative decrease
+            elif (queue_depth or 0) == 0:
+                cur = min(cur + 1, max(bdp_win, 1))   # additive increase
+            est.window_choice = cur
+            return cur
+
+    def current_window(self, src: int, dst: int) -> Optional[int]:
+        """The adaptive controller's current (src → dst) window, or None
+        when no adaptive decision has been made on that link yet."""
+        with self._lock:
+            est = self._links.get((src, dst))
+            return est.window_choice if est is not None else None
+
+    def reset_window(self, src: int, dst: int) -> None:
+        """Forget the adaptive controller state for (src → dst) — the
+        next adaptive decision restarts from the BDP sizing (benchmarks
+        use this for clean A/B arms; estimates are untouched)."""
+        with self._lock:
+            est = self._links.get((src, dst))
+            if est is not None:
+                est.window_choice = None
 
     def penalty_bytes(self, src: int, dst: int, seconds: float,
                       lo: int = 64 << 10, hi: int = 1 << 20) -> int:

@@ -52,6 +52,22 @@ chunks ever in flight in one stream) and ``overlap_bytes`` — chunk
 uploads that had fully completed before the last chunk arrived, i.e.
 copies hidden entirely behind the network.
 
+Flow control is ADAPTIVE and receiver-paced (unless ``net_window`` pins
+it): every credit decision consults ``InterconnectModel.window_chunks``
+as an AIMD controller fed with the receiver's live transfer-lane backlog
+and landing-slab occupancy — both of which also travel back to the
+sender in the credit message, alongside the receiver's cumulative
+completed-upload count (``acked``) and the new window target. When the
+receiver's lane backs up the controller halves the window (min 1) and
+the receiver *withholds* credits (``credits_deferred``); when the lane
+drains ahead of arrival it widens back toward the BDP ceiling and grants
+the accumulated credits in one coalesced message (fewer control messages
+than naive per-chunk crediting — which matters, because the simulated
+control channel has a finite drain rate and bills credit chatter). The
+sender honors shrink directly: ``_advance_stream`` holds chunks — even
+with banked credits — while ``sent − acked`` is at or above the
+receiver's latest window.
+
 On a real TPU pod the network step lowers to ICI collectives
 (see distributed/collectives.py); this layer is the host-side control plane
 and the single-node multi-device execution engine.
@@ -151,8 +167,20 @@ class Message:
     nchunks: Optional[int] = None
     total_bytes: Optional[int] = None
     # credit-based flow control: the CTS carries the initial window (how
-    # many chunks may be in flight), each 'credit' message returns one
+    # many chunks may be in flight); each 'credit' message returns one or
+    # more (the receiver coalesces grants when it re-widens the window)
     credits: int = 0
+    # -- adaptive flow-control feedback (receiver → sender) --
+    # the receiver's current window target; the sender holds chunks while
+    # sent − acked ≥ window even if it has banked credits (honors shrink)
+    window: Optional[int] = None
+    # cumulative chunk uploads the receiver has completed for this stream
+    # (keeps the sender's in-flight accounting exact across deferrals)
+    acked: int = 0
+    # the receiver's transfer-lane backlog and landing-slab occupancy at
+    # grant time — the congestion signals the controller fed on
+    rx_queue: int = 0
+    rx_slab_bytes: int = 0
 
 
 class Rank:
@@ -176,10 +204,11 @@ class Rank:
         # window credits, send cursor) per msg_id — mutated ONLY on the
         # net-send lane after the RTS — in-progress incoming reassembly
         # state per msg_id, and streamed pool buffers awaiting the
-        # receiver's completion ack
+        # receiver's completion ack (keyed with the peer they are parked
+        # for, so a peer-removal sweep can release exactly its buffers)
         self._rdzv_out: Dict[int, Dict[str, Any]] = {}
         self._rdzv_in: Dict[int, Dict[str, Any]] = {}
-        self._rdzv_bufs: Dict[int, np.ndarray] = {}
+        self._rdzv_bufs: Dict[int, Tuple[int, np.ndarray]] = {}
         # typed progress-engine lanes on the runtime's shared reactor:
         # net-send streams rendezvous chunks (the pump never transmits a
         # payload window itself), net-recv completes incoming streams
@@ -202,7 +231,18 @@ class Rank:
                       "bytes_d2d": 0, "bytes_staged": 0,
                       "eager": 0, "rendezvous": 0,
                       "chunks_out": 0, "chunks_in": 0, "overlap_bytes": 0,
-                      "credits_in": 0, "max_window": 0}
+                      "credits_in": 0, "max_window": 0,
+                      # adaptive flow control (receiver side): window
+                      # retargets, credits withheld under backlog, the
+                      # smallest window granted, and the deepest
+                      # transfer-lane backlog seen at a credit decision
+                      "window_adjusts": 0, "credits_deferred": 0,
+                      "window_min": 0, "rx_queue_peak": 0,
+                      # pump handler exceptions routed to the error sink
+                      "handler_errors": 0}
+        # bounded trace of swallowed pump-handler errors (strict mode
+        # re-raises the first at the next Cluster.barrier)
+        self._errors: List[BaseException] = []
         self._stop = False
         self._thread = threading.Thread(target=self._pump, daemon=True,
                                         name=f"prema-rank{rank}")
@@ -351,10 +391,16 @@ class Rank:
         thread wake in the per-chunk credit loop, which is the loop's
         critical path. Returns True when the message was consumed."""
         if msg.kind == "cts" or msg.kind == "credit":
-            self._net_send.submit(
-                lambda mid=msg.msg_id, c=max(msg.credits, 1),
-                init=(msg.kind == "cts"):
-                self._advance_stream(mid, c, initial=init))
+            if self._stop:
+                return True        # rank leaving: drop stream advances
+            try:
+                self._net_send.submit(
+                    lambda mid=msg.msg_id, c=msg.credits, w=msg.window,
+                    a=msg.acked, init=(msg.kind == "cts"):
+                    self._advance_stream(mid, c, window=w, acked=a,
+                                         initial=init))
+            except RuntimeError:   # lane stopped mid-shutdown: drop
+                pass
             return True
         return False
 
@@ -462,30 +508,52 @@ class Rank:
             "elems": elems, "pooled": pooled,
             "next_seq": 0,     # chunks handed to the network so far
             "credits": 0,      # window slots currently available
-            "returned": 0,     # credits returned by completed uploads
+            "window": None,    # receiver's latest window target
+            "acked": 0,        # receiver-reported completed uploads
         }
         self.stats["rendezvous"] += 1
         self.stats["sent"] += 1
         self.cluster.deliver(meta)
 
     def _advance_stream(self, msg_id: int, credits: int,
+                        window: Optional[int] = None, acked: int = 0,
                         initial: bool = False) -> None:
         """Net-send lane only. Fold ``credits`` into the stream's window
         and transmit every chunk the window now covers — the sender
         advances on per-chunk CTS credits, never on completion of the
         whole previous chunk, so ≥2 chunks stay in flight and the pump
         thread never transmits a payload window itself. The initial CTS
-        grant opens the window; later credits also count as completed
-        uploads for the in-flight accounting."""
+        grant opens the window.
+
+        Adaptive shrink is honored here: each credit carries the
+        receiver's latest window target and its cumulative completed
+        uploads (``acked``), so the sender holds chunks — even with
+        banked credits — while ``sent − acked`` is at or above the
+        target. ``acked`` (not the credit count) keeps the in-flight
+        accounting exact when the receiver defers credits under
+        backlog."""
         state = self._rdzv_out.get(msg_id)
         if state is None:      # stream already fully handed to the network
             return
         state["credits"] += credits
-        if not initial:
-            state["returned"] += credits
+        # VCs can reorder: each credit's acked is strictly newer than the
+        # last (one per completed upload), so both acked and the window
+        # target are accepted only from messages that ADVANCE the
+        # completion count — a stale reordered grant must not re-widen a
+        # window the receiver has since shrunk
+        newer = acked > state["acked"]
+        if newer:
+            state["acked"] = acked
+        if window and (initial or newer or state["window"] is None):
+            state["window"] = window
+        if not initial and credits:
             self.stats["credits_in"] += credits
         meta, flat, elems = state["meta"], state["flat"], state["elems"]
         while state["credits"] > 0 and state["next_seq"] < meta.nchunks:
+            in_flight = state["next_seq"] - state["acked"]
+            if state["window"] is not None \
+                    and in_flight >= state["window"]:
+                break          # receiver shrank the window: hold the rest
             k = state["next_seq"]
             piece = flat[k * elems:(k + 1) * elems]
             chunk = Message(msg_id=msg_id, kind="chunk", src=self.rank,
@@ -496,18 +564,37 @@ class Rank:
             state["next_seq"] = k + 1
             self.stats["chunks_out"] += 1
             self.stats["bytes_out"] += piece.nbytes
-            in_flight = state["next_seq"] - state["returned"]
-            if in_flight > self.stats["max_window"]:
-                self.stats["max_window"] = in_flight
+            if in_flight + 1 > self.stats["max_window"]:
+                self.stats["max_window"] = in_flight + 1
             self.cluster.deliver(chunk)
         if state["next_seq"] >= meta.nchunks:
             # stream fully transmitted: drop the send state; a pooled
             # staging buffer stays parked until the completion ack
             if state["pooled"]:
-                self._rdzv_bufs[msg_id] = state["arr"]
+                self._rdzv_bufs[msg_id] = (meta.dst, state["arr"])
             del self._rdzv_out[msg_id]
 
     # -- rendezvous protocol (receiver side) ---------------------------
+    def _transfer_backlog(self, dev: int) -> int:
+        """Live queue depth of ``dev``'s transfer lane (jobs waiting
+        behind the in-service one) — the drain-rate signal the adaptive
+        credit controller feeds on."""
+        if not self.runtime.cfg.transfer_thread:
+            return 0
+        ln = self.runtime.engine.peek("transfer", dev)
+        return ln.backlog() if ln is not None else 0
+
+    def _slab_bytes(self, exclude_mid: Optional[int] = None) -> int:
+        """Landing-slab occupancy: bytes committed to OTHER in-progress
+        incoming streams (the receiver-side memory concurrent windows
+        are competing for). The deciding stream excludes itself — its
+        slab is fully allocated at RTS no matter what the window does,
+        so counting it would make any single stream larger than the slab
+        limit collapse its own window to 1 for its whole lifetime."""
+        return sum(st["meta"].total_bytes or 0
+                   for mid, st in list(self._rdzv_in.items())
+                   if mid != exclude_mid)
+
     def _prepare_rendezvous(self, meta: Message) -> None:
         """RTS received: pick the consumer-routed landing device, start
         allocating the flat landing slab ON that device (the allocation
@@ -515,14 +602,22 @@ class Rank:
         and signal CTS carrying the initial credit window — enough chunks
         in flight to cover the link's measured bandwidth-delay product
         (≥2, so the sender can always overlap chunk k+1's transmit with
-        chunk k's upload here)."""
+        chunk k's upload here). With ``net_window=None`` the window is
+        ADAPTIVE: the controller starts from the BDP but already folds in
+        this rank's live transfer-lane backlog and slab occupancy, and
+        every subsequent credit decision re-targets it mid-stream."""
         dev = self._landing_device(meta)
         rt = self.runtime
+        chunk_b = max(meta.total_bytes // max(meta.nchunks, 1), 1)
         window = rt.cfg.net_window
-        if window is None:
-            chunk_b = meta.total_bytes // max(meta.nchunks, 1)
+        adaptive = window is None
+        rx_queue, slab_bytes = 0, 0
+        if adaptive:
+            rx_queue = self._transfer_backlog(dev)
+            slab_bytes = self._slab_bytes()
             window = self.cluster.topology.window_chunks(
-                meta.src, self.rank, max(chunk_b, 1))
+                meta.src, self.rank, chunk_b,
+                queue_depth=rx_queue, slab_bytes=slab_bytes)
         window = max(1, min(window, meta.nchunks))
         state = {
             "meta": meta,
@@ -530,6 +625,12 @@ class Rank:
             "uploads": {},           # seq -> (chunk-landed future, nbytes)
             "arrived": 0,
             "slab": None,            # device slab, chained through chunks
+            # -- adaptive flow-control state --
+            "adaptive": adaptive,
+            "chunk_b": chunk_b,
+            "win": window,           # current window target
+            "outstanding": window,   # chunks granted but not yet uploaded
+            "completed": 0,          # cumulative uploads retired (acked)
         }
         device = rt._device(dev)
         if meta.nchunks > 1 and getattr(device, "jax_device", None) \
@@ -545,9 +646,60 @@ class Rank:
             # FIFO transfer lane: the init lands before any chunk update
             rt._async_transfer(dev, init)
         self._rdzv_in[meta.msg_id] = state
+        if window < self.stats["window_min"] or not self.stats["window_min"]:
+            self.stats["window_min"] = window
         self.cluster.deliver(Message(msg_id=meta.msg_id, kind="cts",
                                      src=self.rank, dst=meta.src,
-                                     credits=window))
+                                     credits=window, window=window,
+                                     rx_queue=rx_queue,
+                                     rx_slab_bytes=slab_bytes))
+
+    def _return_credit(self, msg_id: int, dst: int,
+                       state: Dict[str, Any]) -> None:
+        """Transfer-lane completion callback: one chunk's device copy
+        retired. A pinned window returns one credit per completion, as
+        before. The adaptive path re-targets the window HERE — mid-stream
+        — with the lane's live backlog and slab occupancy: under backlog
+        it withholds the credit entirely (``credits_deferred``; the
+        sender's window shrinks by attrition, min 1 because a grant
+        always fires when nothing is outstanding), and when the lane has
+        drained it grants the deficit in one coalesced credit carrying
+        the new window, the cumulative ``acked`` count, and the raw
+        congestion signals."""
+        state["completed"] += 1
+        state["outstanding"] -= 1
+        meta = state["meta"]
+        if state["arrived"] >= meta.nchunks:
+            return     # stream fully arrived: no credits left to spend
+        q = self._transfer_backlog(state["dev"])
+        if q > self.stats["rx_queue_peak"]:
+            self.stats["rx_queue_peak"] = q
+        if not state["adaptive"]:
+            self.cluster.deliver(Message(
+                msg_id=msg_id, kind="credit", src=self.rank, dst=dst,
+                credits=1, window=state["win"],
+                acked=state["completed"], rx_queue=q))
+            return
+        slab = self._slab_bytes(exclude_mid=msg_id)
+        target = self.cluster.topology.window_chunks(
+            meta.src, self.rank, state["chunk_b"],
+            queue_depth=q, slab_bytes=slab)
+        target = max(target, 1)
+        if target != state["win"]:
+            self.stats["window_adjusts"] += 1
+            state["win"] = target
+            if target < self.stats["window_min"] \
+                    or not self.stats["window_min"]:
+                self.stats["window_min"] = target
+        grant = target - state["outstanding"]
+        if grant <= 0:
+            self.stats["credits_deferred"] += 1
+            return
+        state["outstanding"] += grant
+        self.cluster.deliver(Message(
+            msg_id=msg_id, kind="credit", src=self.rank, dst=dst,
+            credits=grant, window=target, acked=state["completed"],
+            rx_queue=q, rx_slab_bytes=slab))
 
     def _receive_chunk(self, msg: Message) -> None:
         """One chunk arrived (possibly out of order): hand it straight to
@@ -557,9 +709,12 @@ class Rank:
         dynamic_update_slice, so the per-chunk device cost is chunk-sized
         (an un-donated assembly would copy the whole slab per chunk, and
         a concatenate at the end would re-copy the whole payload). When
-        the upload completes, one flow-control credit travels back to the
-        sender — the completion event that slides its window forward."""
-        state = self._rdzv_in[msg.msg_id]
+        the upload completes, the flow-control credit decision runs
+        (``_return_credit``) — the completion event that slides the
+        sender's window forward, or deliberately lets it shrink."""
+        state = self._rdzv_in.get(msg.msg_id)
+        if state is None:
+            return   # stream swept (peer removed) — drop the orphan chunk
         rt, dev = self.runtime, state["dev"]
         payload, offset = msg.payload, msg.offset
         direct = msg.path == "direct" and not isinstance(payload, np.ndarray)
@@ -589,13 +744,12 @@ class Rank:
         state["arrived"] += 1
         self.stats["chunks_in"] += 1
         if msg.nchunks > 1:
-            # credit returns the moment this chunk's device copy retires
-            # (fires on the transfer lane — never blocks the pump)
+            # the credit decision runs the moment this chunk's device
+            # copy retires (fires on the transfer lane — never blocks
+            # the pump)
             fut.add_done_callback(
-                lambda _f, mid=msg.msg_id, dst=msg.src:
-                self.cluster.deliver(Message(msg_id=mid, kind="credit",
-                                             src=self.rank, dst=dst,
-                                             credits=1)))
+                lambda _f, mid=msg.msg_id, src=msg.src, st=state:
+                self._return_credit(mid, src, st))
         if state["arrived"] == msg.nchunks:
             # stream complete: the tail-upload waits and the handler run
             # move to the net-recv lane so the pump stays responsive; the
@@ -613,7 +767,9 @@ class Rank:
         ``Cluster.barrier`` reads it as a busy signal, and popping early
         would let the barrier pass while the tail uploads (up to a whole
         chunk) are still in flight."""
-        state = self._rdzv_in[msg_id]
+        state = self._rdzv_in.get(msg_id)
+        if state is None:
+            return   # stream swept (peer removed) before completion
         try:
             meta, dev = state["meta"], state["dev"]
             uploads = state["uploads"]
@@ -653,7 +809,7 @@ class Rank:
                                          src=self.rank, dst=meta.src))
             self._invoke(meta, obj)
         finally:
-            del self._rdzv_in[msg_id]
+            self._rdzv_in.pop(msg_id, None)
 
     def _handle(self, msg: Message):
         if msg.kind == "meta":
@@ -676,23 +832,19 @@ class Rank:
                     self._invoke(msg, obj)
                 else:
                     self._pending_meta[msg.msg_id] = msg
-        elif msg.kind == "cts":
-            # window opened: stream on the net-send lane, not the pump —
-            # unrelated messages are never head-of-line blocked behind
-            # this stream's payload
-            self._net_send.submit(
-                lambda mid=msg.msg_id, c=max(msg.credits, 1):
-                self._advance_stream(mid, c, initial=True))
-        elif msg.kind == "credit":
-            self._net_send.submit(
-                lambda mid=msg.msg_id, c=max(msg.credits, 1):
-                self._advance_stream(mid, c))
+        elif msg.kind == "cts" or msg.kind == "credit":
+            # window opened / slid: stream on the net-send lane, not the
+            # pump — unrelated messages are never head-of-line blocked
+            # behind this stream's payload (normally intercepted by
+            # dispatch_control; this path serves Cluster subclasses that
+            # enqueue control messages directly)
+            self.dispatch_control(msg)
         elif msg.kind == "chunk":
             self._receive_chunk(msg)
         elif msg.kind == "ack":
-            buf = self._rdzv_bufs.pop(msg.msg_id, None)
-            if buf is not None:
-                self.runtime.staging.release(buf)
+            parked = self._rdzv_bufs.pop(msg.msg_id, None)
+            if parked is not None:
+                self.runtime.staging.release(parked[1])
         elif msg.kind == "payload":
             meta = self._pending_meta.pop(msg.msg_id, None)
             if meta is None:       # payload raced ahead of metadata
@@ -790,17 +942,107 @@ class Rank:
             self._busy_enter()    # popped but effects not yet visible
             try:
                 self._handle(msg)
-            except BaseException:   # a bad message must not kill the rank
-                import traceback
-                traceback.print_exc()
+            except BaseException as e:  # bad message must not kill the rank
+                self._record_handler_error(e)
             finally:
                 self._busy_exit()
+
+    def _record_handler_error(self, exc: BaseException) -> None:
+        """Route a swallowed pump/handler exception to the error sink:
+        counted in ``stats["handler_errors"]``, bounded trace kept for
+        ``check()`` (strict mode re-raises at the next barrier)."""
+        self.stats["handler_errors"] += 1
+        self._errors.append(exc)
+        del self._errors[:-50]
+        if not (self._stop or self.runtime.cfg.strict_errors):
+            import traceback
+            traceback.print_exception(type(exc), exc, exc.__traceback__)
+
+    def check(self) -> None:
+        """Strict mode: re-raise the first swallowed pump-handler error
+        (``Cluster.barrier`` calls this after draining)."""
+        if self._errors and self.runtime.cfg.strict_errors:
+            raise RuntimeError(
+                f"rank {self.rank}: {self.stats['handler_errors']} "
+                "swallowed handler error(s)") from self._errors[0]
+
+    # -- rendezvous-state hygiene (peer loss / shutdown) ---------------
+    def state_gauges(self) -> Dict[str, int]:
+        """Leak gauges: live rendezvous/protocol state entries. All zero
+        once every stream completed or was swept."""
+        return {"rdzv_out": len(self._rdzv_out),
+                "rdzv_in": len(self._rdzv_in),
+                "rdzv_bufs": len(self._rdzv_bufs),
+                "pending_meta": len(self._pending_meta)}
+
+    def _sweep_out_streams(self, peer: Optional[int] = None
+                           ) -> Dict[str, int]:
+        """Sweep the SEND-side rendezvous state tied to ``peer`` (``None``
+        = all peers): parked outgoing streams whose CTS/credits will
+        never arrive, and pooled buffers whose completion ack is lost —
+        their staging buffers return to the pool. ``_rdzv_out`` and
+        ``_rdzv_bufs`` are mutated only on the net-send lane, so this
+        must run THERE (or after the lane is joined, at shutdown) —
+        never concurrently with ``_advance_stream``, which may still be
+        handing out zero-copy views of the very buffer being released."""
+        swept = {"rdzv_out": 0, "rdzv_bufs": 0}
+        for mid, st in list(self._rdzv_out.items()):
+            if peer is None or st["meta"].dst == peer:
+                del self._rdzv_out[mid]
+                if st["pooled"]:
+                    self.runtime.staging.release(st["arr"])
+                swept["rdzv_out"] += 1
+        for mid, (dst, buf) in list(self._rdzv_bufs.items()):
+            if peer is None or dst == peer:
+                del self._rdzv_bufs[mid]
+                self.runtime.staging.release(buf)
+                swept["rdzv_bufs"] += 1
+        return swept
+
+    def _sweep_in_state(self, peer: Optional[int] = None) -> Dict[str, int]:
+        """Sweep the RECEIVE-side state tied to ``peer`` (``None`` = all):
+        in-progress reassembly entries and orphaned metadata halves —
+        the leaks an elastic rescale would otherwise accumulate. Orphan
+        chunks for a swept stream are dropped by ``_receive_chunk``."""
+        swept = {"rdzv_in": 0, "pending_meta": 0}
+        for mid, st in list(self._rdzv_in.items()):
+            if peer is None or st["meta"].src == peer:
+                if self._rdzv_in.pop(mid, None) is not None:
+                    swept["rdzv_in"] += 1
+        for mid, m in list(self._pending_meta.items()):
+            if peer is None or m.src == peer:
+                if self._pending_meta.pop(mid, None) is not None:
+                    swept["pending_meta"] += 1
+        return swept
+
+    def remove_peer(self, peer: int) -> Dict[str, int]:
+        """A peer left the cluster mid-stream (elastic rescale): sweep
+        every rendezvous stream to/from it and release the pooled
+        buffers its lost CTS/credit/ack messages left parked. The whole
+        send-side sweep runs on the net-send lane (the only mutator of
+        ``_rdzv_out``/``_rdzv_bufs``), so it cannot race a concurrent
+        ``_advance_stream``; the receive-side sweep runs here. Returns
+        the per-kind swept counts."""
+        try:
+            fut: HFuture = HFuture()
+            self._net_send.submit(
+                lambda p=peer: self._sweep_out_streams(p), fut)
+            swept = dict(fut.get(timeout=10))
+        except RuntimeError:       # lane already stopped: sweep inline
+            swept = dict(self._sweep_out_streams(peer))
+        swept.update(self._sweep_in_state(peer))
+        return swept
 
     def shutdown(self):
         self._stop = True
         self.enqueue(None)
         self._thread.join(timeout=5)
         self.runtime.shutdown()
+        # lanes are drained and joined: release whatever rendezvous
+        # state in-flight shutdown stranded (pooled buffers back to the
+        # pool, reassembly/metadata entries dropped)
+        self._sweep_out_streams()
+        self._sweep_in_state()
 
 
 @dataclasses.dataclass
@@ -829,9 +1071,23 @@ class Cluster:
     k+1's transmit overlaps chunk k's receive-side upload across the
     whole credit window, instead of the old store-and-forward model that
     billed transmission in the sender's pump and kept exactly one chunk
-    in flight. Control messages (CTS, credits, acks — anything 0-byte)
-    ride a higher-priority virtual channel on the link, the way real
-    fabrics keep flow control out from behind bulk data.
+    in flight. The wire is occupied only for each message's
+    SERIALIZATION time (bytes/bandwidth); propagation latency delays
+    delivery on a per-link ``linkprop`` lane without holding the wire —
+    true cut-through, so a long-fat link does not serialize messages
+    behind each other's flight time. Control messages (CTS, credits,
+    acks — anything 0-byte) ride a higher-priority virtual channel on
+    the link, the way real fabrics keep flow control out from behind
+    bulk data.
+
+    The control VC is NOT free: it has a finite per-link drain rate
+    (``ctrl_drain_per_s`` messages/second, a NIC-message-rate analogue)
+    and its own ``_ctrl_free`` occupancy schedule mirroring the payload
+    wire's ``_wire_free`` — so a credit storm queues behind itself and
+    is billed real simulated time, instead of the old model where
+    control chatter cost nothing and naive per-chunk crediting looked
+    free. ``ctrl_stats`` counts control messages and their accumulated
+    queueing; ``ctrl_drain_per_s=0`` restores the unbilled channel.
 
     ``topology`` is the rank-pair ``InterconnectModel``: every
     payload-carrying delivery is timed into it, and the rendezvous
@@ -841,9 +1097,11 @@ class Cluster:
     _CONTROL_KINDS = frozenset({"cts", "ack", "credit", "get"})
 
     def __init__(self, n_ranks: int, rt_config: Optional[RuntimeConfig] = None,
-                 latency_s: float = 0.0, bw_bytes_per_s: float = 0.0):
+                 latency_s: float = 0.0, bw_bytes_per_s: float = 0.0,
+                 ctrl_drain_per_s: float = 200e3):
         self.latency_s = latency_s
         self.bw = bw_bytes_per_s
+        self.ctrl_drain = ctrl_drain_per_s
         self.topology = InterconnectModel()
         self.net = ProgressEngine(name="net")
         self._inflight = 0             # messages on a link lane right now
@@ -854,6 +1112,11 @@ class Cluster:
         # (only each message's own delivery jitters, the wire schedule
         # stays faithful). Written only from that link's serial lane.
         self._wire_free: Dict[Tuple[int, int], float] = {}
+        # control-VC occupancy schedule (finite drain rate): written from
+        # ANY delivering thread at reservation time, hence its own lock
+        self._ctrl_free: Dict[Tuple[int, int], float] = {}
+        self._ctrl_lock = threading.Lock()
+        self.ctrl_stats = {"msgs": 0, "queued_s": 0.0}
         self.ranks = [Rank(self, r, rt_config) for r in range(n_ranks)]
 
     @staticmethod
@@ -907,31 +1170,54 @@ class Cluster:
             return
         prio = msg_priority(msg, nbytes)
         link = (msg.src, msg.dst)
-        if prio == PRIO_CONTROL and delay <= 100e-6:
-            # control VC, latency-only and tiny: deliver inline in the
-            # calling thread. Waking an idle per-link control lane costs
-            # several hundred µs on a busy host — far more than the
-            # simulated latency itself — and would also let a payload
-            # overtake its own metadata.
-            self._sleep_until(time.perf_counter() + delay)
-            if not dst.dispatch_control(msg):
-                dst.enqueue(msg, prio)
+        if prio == PRIO_CONTROL:
+            # control VC: billed against the finite per-link drain rate.
+            # The delivery instant is reserved on the _ctrl_free schedule
+            # up front (monotonic per link, so control stays ordered),
+            # then short waits deliver inline in the calling thread —
+            # waking an idle per-link control lane costs several hundred
+            # µs on a busy host, far more than the simulated latency —
+            # and queued-up waits (a credit storm billing real time) move
+            # to the linkctl lane so the caller never stalls on them.
+            t0 = time.perf_counter()
+            t_deliver = t0 + delay
+            if self.ctrl_drain > 0:
+                service = 1.0 / self.ctrl_drain
+                with self._ctrl_lock:
+                    start = max(t0, self._ctrl_free.get(link, 0.0))
+                    self._ctrl_free[link] = start + service
+                    self.ctrl_stats["msgs"] += 1
+                    self.ctrl_stats["queued_s"] += start - t0
+                t_deliver = start + service + delay
+            ctl = self.net.peek("linkctl", link)
+            if t_deliver - t0 <= 100e-6 and (ctl is None or not ctl.busy()):
+                self._sleep_until(t_deliver)
+                if not dst.dispatch_control(msg):
+                    dst.enqueue(msg, prio)
+                return
+            with self._inflight_lock:
+                self._inflight += 1
+
+            def transmit_ctrl():
+                try:
+                    self._sleep_until(t_deliver)
+                    if not dst.dispatch_control(msg):
+                        dst.enqueue(msg, prio)
+                finally:
+                    with self._inflight_lock:
+                        self._inflight -= 1
+
+            try:
+                self.net.submit("linkctl", link, transmit_ctrl)
+            except RuntimeError:    # engine shut down: drop, roll back
+                with self._inflight_lock:
+                    self._inflight -= 1
             return
         with self._inflight_lock:
             self._inflight += 1
 
-        def transmit():
+        def finish(t0: float):
             try:
-                t0 = time.perf_counter()
-                if prio > 0:
-                    # payload: occupy the wire for exactly `delay`
-                    start = max(t0, self._wire_free.get(link, 0.0))
-                    t_deliver = start + delay
-                    self._wire_free[link] = t_deliver
-                else:
-                    # control VC: latency only, no wire occupancy
-                    t_deliver = t0 + delay
-                self._sleep_until(t_deliver)
                 if not dst.dispatch_control(msg):
                     dst.enqueue(msg, prio)
                 if nbytes:
@@ -941,8 +1227,40 @@ class Cluster:
                 with self._inflight_lock:
                     self._inflight -= 1
 
-        lane_kind = "link" if prio > 0 else "linkctl"
-        self.net.submit(lane_kind, link, transmit, priority=prio)
+        def transmit():
+            # cut-through: the wire is OCCUPIED only for the
+            # serialization time (bytes/bandwidth); propagation latency
+            # delays delivery but does not hold the wire — billing
+            # latency as occupancy would make every message on a
+            # long-fat link serialize behind the previous one's whole
+            # flight time, which no real fabric does. The link lane
+            # paces occupancy; the per-link propagation lane sleeps out
+            # the latency (delivery instants are monotonic per link, so
+            # its FIFO preserves order).
+            t0 = time.perf_counter()
+            serialize = nbytes / self.bw if self.bw and nbytes else 0.0
+            start = max(t0, self._wire_free.get(link, 0.0))
+            self._wire_free[link] = start + serialize
+            t_deliver = start + serialize + self.latency_s
+            if self.latency_s > 0:
+                self._sleep_until(start + serialize)
+
+                def propagate():
+                    self._sleep_until(t_deliver)
+                    finish(t0)
+                try:
+                    self.net.submit("linkprop", link, propagate)
+                    return
+                except RuntimeError:    # engine shutting down: inline
+                    pass
+            self._sleep_until(t_deliver)
+            finish(t0)
+
+        try:
+            self.net.submit("link", link, transmit, priority=prio)
+        except RuntimeError:        # engine shut down: drop, roll back
+            with self._inflight_lock:
+                self._inflight -= 1
 
     def _rank_busy(self, r: Rank) -> bool:
         with r._out_lock:
@@ -977,6 +1295,7 @@ class Cluster:
                 idle_sweeps += 1
         for r in self.ranks:
             r.runtime.barrier(timeout=max(deadline - time.time(), 1.0))
+            r.check()      # strict mode: surface swallowed handler errors
 
     def shutdown(self):
         for r in self.ranks:

@@ -341,6 +341,211 @@ def test_oversized_direct_put_lands_consumer_routed(cluster):
 
 
 # ---------------------------------------------------------------------------
+# Lane.busy() window regression: barrier never returns mid-delivery
+# ---------------------------------------------------------------------------
+
+def test_cluster_barrier_never_early_200_iterations(cluster):
+    """Acceptance: 200 consecutive send→barrier cycles, each a 2-chunk
+    rendezvous stream, must all observe the handler's effects after
+    barrier(). The popped-but-unmarked Lane window (a job extracted from
+    the net-recv/net-send queue but not yet marked executing) made the
+    two-sweep all-idle check porous; the pending-counter accounting
+    closes it."""
+    data = np.arange((256 << 10) // 4, dtype=np.float32)     # 2 chunks
+    for trial in range(200):
+        with _lock:
+            _received.clear()
+        obj = cluster.ranks[0].runtime.hetero_object(data + trial)
+        cluster.ranks[0].send(1, "proto_recv", obj)
+        cluster.barrier()
+        with _lock:
+            assert "data" in _received, f"trial {trial}: barrier early"
+            np.testing.assert_array_equal(_received["data"], data + trial)
+
+
+# ---------------------------------------------------------------------------
+# swallowed handler errors → error sink (strict mode)
+# ---------------------------------------------------------------------------
+
+@handler(name="proto_boom")
+def _boom(ctx, obj):
+    raise ValueError("handler exploded")
+
+
+def test_handler_error_routed_to_sink():
+    cfg = RuntimeConfig(memory_capacity=1 << 26, eager_threshold=64 << 10)
+    with Cluster(2, cfg) as c:
+        c.ranks[0].send(1, "proto_boom")
+        deadline = time.time() + 10
+        r1 = c.ranks[1]
+        while r1.stats["handler_errors"] == 0 and time.time() < deadline:
+            time.sleep(0.005)
+        assert r1.stats["handler_errors"] == 1
+        c.barrier()            # not strict: barrier passes, error counted
+
+
+def test_handler_error_strict_mode_fails_barrier():
+    cfg = RuntimeConfig(memory_capacity=1 << 26, eager_threshold=64 << 10,
+                        strict_errors=True)
+    with Cluster(2, cfg) as c:
+        c.ranks[0].send(1, "proto_boom")
+        deadline = time.time() + 10
+        while c.ranks[1].stats["handler_errors"] == 0 \
+                and time.time() < deadline:
+            time.sleep(0.005)
+        with pytest.raises(RuntimeError, match="handler error"):
+            c.barrier()
+
+
+# ---------------------------------------------------------------------------
+# rendezvous-state hygiene: peer loss / shutdown sweeps (leak gauges)
+# ---------------------------------------------------------------------------
+
+class _BlackholeCluster(Cluster):
+    """Drops selected message kinds toward selected ranks — the
+    mid-stream peer loss an elastic rescale produces."""
+
+    def deliver(self, msg):
+        if msg.kind in self._drop_kinds and msg.dst in self._drop_to:
+            return
+        super().deliver(msg)
+
+
+def _blackhole(n, cfg, drop_kinds, drop_to):
+    c = _BlackholeCluster.__new__(_BlackholeCluster)
+    c._drop_kinds = frozenset(drop_kinds)
+    c._drop_to = frozenset(drop_to)
+    Cluster.__init__(c, n, cfg)
+    return c
+
+
+def test_remove_peer_sweeps_parked_stream_and_releases_buffer():
+    """Peer lost before its CTS arrives: the outgoing stream state (and
+    its pooled staging buffer) must be swept by remove_peer, and the
+    buffer must genuinely return to the pool (next same-shape acquire
+    hits)."""
+    cfg = RuntimeConfig(memory_capacity=1 << 28, eager_threshold=64 << 10,
+                        chunk_bytes=128 << 10)
+    with _blackhole(2, cfg, drop_kinds={"cts"}, drop_to={0}) as c:
+        r0 = c.ranks[0]
+        obj = r0.runtime.hetero_object(np.ones(1 << 17, np.float32))
+        r0.send(1, "proto_recv", obj)
+        deadline = time.time() + 10
+        while not r0._rdzv_out and time.time() < deadline:
+            time.sleep(0.005)
+        assert r0.state_gauges()["rdzv_out"] == 1    # parked, CTS lost
+        hits0 = r0.runtime.staging.hits
+        swept = r0.remove_peer(1)
+        assert swept["rdzv_out"] == 1
+        gauges = r0.state_gauges()
+        assert all(v == 0 for v in gauges.values()), gauges
+        # the pooled staging buffer is back: same-shape acquire hits
+        buf = r0.runtime.staging.acquire((1 << 17,), np.float32)
+        assert r0.runtime.staging.hits == hits0 + 1
+        r0.runtime.staging.release(buf)
+
+
+def test_remove_peer_sweeps_ack_parked_buffer_and_receiver_state():
+    """Stream fully sent but the completion ack is lost: the sender's
+    parked pool buffer leaks until the peer-removal sweep. The receiver
+    side sweeps its reassembly state for the removed peer too."""
+    cfg = RuntimeConfig(memory_capacity=1 << 28, eager_threshold=64 << 10,
+                        chunk_bytes=128 << 10)
+    with _blackhole(2, cfg, drop_kinds={"ack"}, drop_to={0}) as c:
+        r0, r1 = c.ranks
+        with _lock:
+            _received.clear()
+        obj = r0.runtime.hetero_object(np.ones(1 << 17, np.float32))
+        r0.send(1, "proto_recv", obj)
+        assert _wait_for("data")
+        c.barrier()
+        assert r0.state_gauges()["rdzv_bufs"] == 1   # ack never came
+        swept = r0.remove_peer(1)
+        assert swept["rdzv_bufs"] == 1
+        assert all(v == 0 for v in r0.state_gauges().values())
+        # receiver-side sweep: orphaned reassembly state from a lost peer
+        r1._rdzv_in[999] = {"meta": type("M", (), {"src": 0,
+                                                   "total_bytes": 0})()}
+        r1._pending_meta[998] = type("M", (), {"src": 0})()
+        swept1 = r1.remove_peer(0)
+        assert swept1["rdzv_in"] == 1 and swept1["pending_meta"] == 1
+        assert all(v == 0 for v in r1.state_gauges().values())
+
+
+def test_shutdown_sweeps_all_rendezvous_state():
+    cfg = RuntimeConfig(memory_capacity=1 << 28, eager_threshold=64 << 10,
+                        chunk_bytes=128 << 10)
+    c = _blackhole(2, cfg, drop_kinds={"cts", "ack"}, drop_to={0})
+    try:
+        r0 = c.ranks[0]
+        obj = r0.runtime.hetero_object(np.ones(1 << 17, np.float32))
+        r0.send(1, "proto_recv", obj)
+        deadline = time.time() + 10
+        while not r0._rdzv_out and time.time() < deadline:
+            time.sleep(0.005)
+        assert r0.state_gauges()["rdzv_out"] == 1
+    finally:
+        c.shutdown()
+    assert all(v == 0 for v in c.ranks[0].state_gauges().values())
+    assert all(v == 0 for v in c.ranks[1].state_gauges().values())
+
+
+# ---------------------------------------------------------------------------
+# adaptive flow-control edge cases (review regressions)
+# ---------------------------------------------------------------------------
+
+def test_slab_occupancy_excludes_deciding_stream(cluster):
+    """A stream's own fully-committed slab must not count toward its own
+    congestion signal — a single transfer larger than WINDOW_SLAB_LIMIT
+    would otherwise collapse its own window to 1 for its whole life."""
+    r1 = cluster.ranks[1]
+
+    class _Meta:
+        def __init__(self, nb):
+            self.total_bytes = nb
+            self.src = 0
+    r1._rdzv_in[101] = {"meta": _Meta(64 << 20)}
+    r1._rdzv_in[102] = {"meta": _Meta(8 << 20)}
+    try:
+        assert r1._slab_bytes() == (64 << 20) + (8 << 20)
+        assert r1._slab_bytes(exclude_mid=101) == 8 << 20
+        assert r1._slab_bytes(exclude_mid=102) == 64 << 20
+    finally:
+        r1._rdzv_in.clear()
+
+
+def test_stale_reordered_credit_cannot_rewiden_window(cluster):
+    """Control VCs can reorder: a credit carrying an older acked count
+    must not overwrite the window target of a newer one the receiver
+    shrank (window accepted only when acked advances)."""
+    r0 = cluster.ranks[0]
+
+    class _Meta:
+        nchunks = 1000   # far from exhausted: stream state stays parked
+        dst = 1
+        path = "host"
+    state = {"meta": _Meta(), "flat": np.zeros(32, np.float32),
+             "arr": None, "elems": 1, "pooled": False, "next_seq": 0,
+             "credits": 0, "window": None, "acked": 0}
+    r0._rdzv_out[777] = state
+    try:
+        # CTS opens window 8
+        r0._advance_stream(777, 8, window=8, acked=0, initial=True)
+        assert state["window"] == 8
+        # newer credit shrinks to 2 (acked advances to 5)
+        r0._advance_stream(777, 1, window=2, acked=5)
+        assert state["window"] == 2 and state["acked"] == 5
+        # stale reordered credit (acked 3, window 8) must change nothing
+        r0._advance_stream(777, 1, window=8, acked=3)
+        assert state["window"] == 2 and state["acked"] == 5
+        # next genuinely-newer credit is accepted again
+        r0._advance_stream(777, 1, window=3, acked=6)
+        assert state["window"] == 3 and state["acked"] == 6
+    finally:
+        r0._rdzv_out.pop(777, None)
+
+
+# ---------------------------------------------------------------------------
 # OwnerMap device hints
 # ---------------------------------------------------------------------------
 

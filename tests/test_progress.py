@@ -86,6 +86,112 @@ def test_completion_event_fires_after_waiter():
         eng.shutdown()
 
 
+def test_lane_busy_has_no_popped_but_unmarked_window():
+    """Regression: a job popped off the priority queue but not yet
+    started must still count as busy — the old `_executing`-only
+    accounting was set after PriorityQueue.get() returned, so a lane
+    mid-handoff looked idle and Cluster.barrier's all-idle sweep could
+    return mid-delivery. The pending counter (moved at submit / in the
+    job's finally) closes the window. The queue's `get` is wrapped to
+    hold the popped item for a beat, making the window deterministic."""
+    from repro.core.futures import HFuture
+    eng = ProgressEngine(name="t")
+    try:
+        ln = eng.lane("x", 0)
+        popped = threading.Event()
+        orig_get = ln._q.get
+
+        def slow_get(*a, **k):
+            item = orig_get(*a, **k)
+            if item[2] is not None:        # not the stop sentinel
+                popped.set()
+                time.sleep(0.05)           # popped-but-unmarked window
+            return item
+
+        ln._q.get = slow_get
+        # the lane thread is still blocked inside the ORIGINAL get; cycle
+        # it once so the next loop iteration picks up the wrapper
+        ln.submit(lambda: None, HFuture()).get(5)
+        done = HFuture()
+        ln.submit(lambda: None, done)
+        assert popped.wait(5)
+        # inside the window: queue is empty, job not yet marked executing
+        assert ln.busy(), "lane looked idle while a popped job was pending"
+        done.get(5)
+        deadline = time.time() + 5
+        while ln.busy() and time.time() < deadline:
+            time.sleep(0.002)
+        assert not ln.busy()
+    finally:
+        eng.shutdown()
+
+
+def test_lane_submit_after_stop_raises_and_fails_future():
+    """Regression: submitting to a stopped lane used to enqueue behind
+    the infinite-priority stop sentinel — the job never ran and its
+    future never resolved (silent hang). It must raise and resolve the
+    future with the error."""
+    from repro.core.futures import HFuture
+    eng = ProgressEngine(name="t")
+    ln = eng.lane("x", 0)
+    eng.shutdown()
+    fut = HFuture()
+    with pytest.raises(RuntimeError):
+        ln.submit(lambda: 1, fut)
+    assert fut.done()
+    with pytest.raises(RuntimeError):
+        fut.get(1)
+    # fire-and-forget submits fail loudly too, not silently
+    with pytest.raises(RuntimeError):
+        ln.submit(lambda: 1)
+
+
+def test_engine_error_sink_records_fire_and_forget_errors(capsys):
+    """Satellite: fire-and-forget lane errors are routed to the engine's
+    error sink (counted, bounded trace) instead of only stderr."""
+    eng = ProgressEngine(name="t")
+    try:
+        eng.lane("x", 0).submit(
+            lambda: (_ for _ in ()).throw(ValueError("sunk")))
+        deadline = time.time() + 5
+        while eng.error_count() == 0 and time.time() < deadline:
+            time.sleep(0.002)
+        assert eng.error_count() == 1
+        assert "ValueError" in eng.errors_snapshot()[0]
+        eng.check()                     # not strict: no raise
+    finally:
+        eng.shutdown()
+
+
+def test_engine_strict_mode_reraises_on_check():
+    eng = ProgressEngine(name="t", strict=True)
+    try:
+        eng.lane("x", 0).submit(
+            lambda: (_ for _ in ()).throw(ValueError("strict-sunk")))
+        deadline = time.time() + 5
+        while eng.error_count() == 0 and time.time() < deadline:
+            time.sleep(0.002)
+        with pytest.raises(RuntimeError, match="swallowed"):
+            eng.check()
+    finally:
+        eng.shutdown()
+
+
+def test_runtime_surfaces_progress_errors_and_strict_barrier():
+    cfg = RuntimeConfig(memory_capacity=1 << 26, strict_errors=True,
+                        topology_probe=False)
+    with Runtime(cfg) as rt:
+        assert rt.stats()["progress_errors"] == 0
+        rt.engine.lane("transfer", 0).submit(
+            lambda: (_ for _ in ()).throw(ValueError("boom")))
+        deadline = time.time() + 5
+        while rt.engine.error_count() == 0 and time.time() < deadline:
+            time.sleep(0.002)
+        assert rt.stats()["progress_errors"] == 1
+        with pytest.raises(RuntimeError):
+            rt.barrier(timeout=10)
+
+
 def test_busy_reflects_queued_and_executing_work():
     eng = ProgressEngine(name="t")
     try:
@@ -298,3 +404,172 @@ def test_window_chunks_covers_bdp_and_clamps():
     assert w >= 8
     assert m.window_chunks(1, 2, 1 << 30) == 2          # floor
     assert m.window_chunks(1, 2, 1) == 16               # cap
+
+
+# ---------------------------------------------------------------------------
+# adaptive credit-window controller (ROADMAP follow-up a)
+# ---------------------------------------------------------------------------
+
+def test_window_controller_shrinks_to_one_and_rewidens():
+    """AIMD controller: backlog halves the window (never below 1, even
+    under sustained pressure), an empty queue widens it back toward the
+    BDP ceiling, and feedback-free calls stay the static BDP sizing."""
+    m = InterconnectModel()
+    m.observe(0, 1, 10 << 20, 10e-3)       # ~1 GB/s
+    m.observe(0, 1, 1 << 10, 1e-3)         # 1 ms latency
+    bdp_win = m.window_chunks(0, 1, 256 << 10)
+    assert bdp_win >= 8
+    assert m.current_window(0, 1) is None  # static query: no state
+    # sustained backlog: halve per decision, floor at 1
+    seen = [m.window_chunks(0, 1, 256 << 10, queue_depth=4)
+            for _ in range(8)]
+    assert seen[0] == max(bdp_win // 2, 1)
+    assert seen[-1] == 1 and min(seen) == 1
+    assert all(w >= 1 for w in seen)
+    assert m.current_window(0, 1) == 1
+    # drained: additive re-widen toward (and capped at) the BDP window
+    grown = [m.window_chunks(0, 1, 256 << 10, queue_depth=0)
+             for _ in range(bdp_win + 4)]
+    assert grown[0] == 2
+    assert grown[-1] == bdp_win
+    assert max(grown) == bdp_win
+    # feedback-free call still returns the static sizing, untouched
+    assert m.window_chunks(0, 1, 256 << 10) == bdp_win
+
+
+def test_window_controller_shrinks_on_slab_occupancy():
+    from repro.core.topology import WINDOW_SLAB_LIMIT
+    m = InterconnectModel()
+    w0 = m.window_chunks(0, 1, 64 << 10, queue_depth=0)
+    w = m.window_chunks(0, 1, 64 << 10, queue_depth=0,
+                        slab_bytes=WINDOW_SLAB_LIMIT + 1)
+    assert w == max(w0 // 2, 1)
+
+
+def _throttle_transfer_lane(lane, stop_evt, busy_s=0.004, cap=4):
+    """Keep a transfer lane artificially backed up: inject sleeper jobs
+    (bounded backlog) so chunk uploads queue behind them — the slowed
+    receiver the adaptive window must react to."""
+    def pump():
+        while not stop_evt.is_set():
+            if lane.pending() < cap:
+                try:
+                    lane.submit(lambda: time.sleep(busy_s))
+                except RuntimeError:
+                    return
+            time.sleep(busy_s / 4)
+    t = threading.Thread(target=pump, daemon=True)
+    t.start()
+    return t
+
+
+def test_adaptive_window_shrinks_under_slowed_receiver_lane():
+    """Tentpole: with the receiver's transfer lane backed up, the credit
+    controller shrinks the window mid-stream (credits withheld), the
+    stream still completes bit-exact, and the receiver records the
+    adaptation. A pinned net_window must bypass all of it."""
+    cfg = RuntimeConfig(memory_capacity=1 << 28,
+                        eager_threshold=64 << 10, chunk_bytes=128 << 10)
+    with Cluster(2, cfg, latency_s=30e-6, bw_bytes_per_s=1e8) as cluster:
+        with _echo_lock:
+            _echo_state.clear()
+        # seed a fat link estimate so the stream OPENS wide (BDP ≈ 2 MB →
+        # a 16-chunk window) and the shrink is observable mid-stream
+        cluster.topology.observe(0, 1, 10 << 20, 10e-3)   # ~1 GB/s
+        cluster.topology.observe(0, 1, 1 << 10, 1e-3)     # 1 ms latency
+        r1 = cluster.ranks[1]
+        r1.route_to("prog_sink", 0)        # pin the landing device
+        lane = r1.runtime.engine.lane("transfer", 0)
+        stop = threading.Event()
+        try:
+            stream_done = threading.Event()
+            with _echo_lock:
+                _echo_state["stream_done"] = stream_done
+            data = np.arange((4 << 20) // 4, dtype=np.float32)  # 32 chunks
+            obj = cluster.ranks[0].runtime.hetero_object(data.copy())
+            cluster.ranks[0].send(1, "prog_sink", obj)
+            # let the CTS grant the wide window, then back the lane up:
+            # the controller must shrink MID-STREAM, withholding credits
+            time.sleep(0.003)
+            _throttle_transfer_lane(lane, stop)
+            assert stream_done.wait(60)
+        finally:
+            stop.set()
+        cluster.barrier(timeout=60)
+        s1 = r1.stats
+        assert s1["window_adjusts"] > 0, s1
+        assert s1["credits_deferred"] > 0, s1
+        assert 1 <= s1["window_min"] <= 2, s1    # shrank under backlog
+        assert s1["rx_queue_peak"] >= 2, s1
+        # the shared-link controller remembers the shrunken window
+        assert cluster.topology.current_window(0, 1) is not None
+        assert cluster.topology.current_window(0, 1) <= 4
+
+
+def test_adaptive_window_rewidens_after_drain():
+    """After a throttled stream shrank the window, an unthrottled stream
+    on the same link must widen it back (credits re-granted, coalesced)."""
+    cfg = RuntimeConfig(memory_capacity=1 << 28,
+                        eager_threshold=64 << 10, chunk_bytes=128 << 10)
+    with Cluster(2, cfg, latency_s=30e-6, bw_bytes_per_s=5e8) as cluster:
+        with _echo_lock:
+            _echo_state.clear()
+        r1 = cluster.ranks[1]
+        r1.route_to("prog_sink", 0)
+        lane = r1.runtime.engine.lane("transfer", 0)
+
+        def one_stream():
+            stream_done = threading.Event()
+            with _echo_lock:
+                _echo_state["stream_done"] = stream_done
+            data = np.ones((4 << 20) // 4, np.float32)
+            obj = cluster.ranks[0].runtime.hetero_object(data)
+            cluster.ranks[0].send(1, "prog_sink", obj)
+            assert stream_done.wait(60)
+            cluster.barrier(timeout=60)
+
+        stop = threading.Event()
+        _throttle_transfer_lane(lane, stop)
+        try:
+            one_stream()                    # shrinks the window
+        finally:
+            stop.set()
+        shrunk = cluster.topology.current_window(0, 1)
+        assert shrunk is not None and shrunk <= 2, shrunk
+        deadline = time.time() + 10         # let the sleeper backlog drain
+        while lane.busy() and time.time() < deadline:
+            time.sleep(0.005)
+        one_stream()                        # drained: widens back
+        rewidened = cluster.topology.current_window(0, 1)
+        assert rewidened > shrunk, (shrunk, rewidened)
+
+
+def test_pinned_net_window_bypasses_adaptation():
+    cfg = RuntimeConfig(memory_capacity=1 << 28,
+                        eager_threshold=64 << 10, chunk_bytes=128 << 10,
+                        net_window=4)
+    with Cluster(2, cfg, latency_s=30e-6, bw_bytes_per_s=5e8) as cluster:
+        with _echo_lock:
+            _echo_state.clear()
+        r1 = cluster.ranks[1]
+        r1.route_to("prog_sink", 0)
+        lane = r1.runtime.engine.lane("transfer", 0)
+        stop = threading.Event()
+        _throttle_transfer_lane(lane, stop)
+        try:
+            stream_done = threading.Event()
+            with _echo_lock:
+                _echo_state["stream_done"] = stream_done
+            data = np.ones((4 << 20) // 4, np.float32)
+            obj = cluster.ranks[0].runtime.hetero_object(data)
+            cluster.ranks[0].send(1, "prog_sink", obj)
+            assert stream_done.wait(60)
+        finally:
+            stop.set()
+        cluster.barrier(timeout=60)
+        s1 = cluster.ranks[1].stats
+        assert s1["window_adjusts"] == 0, s1
+        assert s1["credits_deferred"] == 0, s1
+        assert s1["window_min"] == 4, s1
+        assert cluster.topology.current_window(0, 1) is None
+        assert cluster.ranks[0].stats["max_window"] <= 4
