@@ -1,0 +1,128 @@
+"""ELASTIC-Recover rung: end-to-end elastic fault tolerance on the
+distributed Jacobi proxy (paper §3.3 "dynamic load balancing and fault
+tolerance" + ISSUE tentpole).
+
+Two arms, both on a simulated network with a billed control VC so the
+heartbeats and recovery control traffic cost simulated time like any
+other message:
+
+  fail_recover — 4 ranks, kill one AFTER an iteration's checkpoint
+      commits, revive it a few iterations later. The run must finish
+      WITHOUT a restart, with a bounded recovery stall, and the answer
+      must be bit-identical to the same elastic run with no fault
+      injected (the restore replays exact committed bytes and the
+      per-shape jit kernels compute the same bits on any rank).
+
+  straggler — over-decomposed (2 slabs/rank), one rank's network frozen
+      while its compute keeps running. The monitor's slowdown fusion
+      (heartbeat gap × EWMA latency × lane backlog) must flag it and
+      live-migrate chunks OFF it without ever declaring it dead.
+
+Run via ``tasking_overhead.py --only ELASTIC-Recover`` (the dry-run
+sweep does this) or directly: ``python benchmarks/elastic_recover.py``.
+"""
+import argparse
+import json
+import tempfile
+import time
+from typing import Dict
+
+import numpy as np
+
+from repro.core import RuntimeConfig
+from repro.distributed import Cluster
+from repro.apps.jacobi3d import run_cluster_elastic, run_reference
+
+_NET = dict(latency_s=100e-6, bw_bytes_per_s=4e9, ctrl_drain_per_s=2e5)
+
+
+def _cfg() -> RuntimeConfig:
+    return RuntimeConfig(memory_capacity=1 << 26)
+
+
+def run_recover(n: int = 48, iters: int = 6, ranks: int = 4) -> Dict:
+    rng = np.random.default_rng(0)
+    u0 = rng.standard_normal((n, n // 2, n // 2)).astype(np.float32)
+    row: Dict = {"n": n, "iters": iters, "ranks": ranks,
+                 "ctrl_billed": True}
+
+    # -- baseline: the same elastic machinery, no fault -----------------
+    t0 = time.perf_counter()
+    with Cluster(ranks, _cfg(), **_NET) as c:
+        base, _ = run_cluster_elastic(u0, iters, c)
+    row["baseline_s"] = round(time.perf_counter() - t0, 4)
+    ref = run_reference(u0, iters)
+    row["oracle_ok"] = bool(np.allclose(base, ref, rtol=1e-5, atol=1e-6))
+
+    # -- arm A: kill + revive mid-run ----------------------------------
+    kill_rank, kill_it = ranks - 2, 1
+    revive_it = min(iters - 2, kill_it + 3)
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        t0 = time.perf_counter()
+        with Cluster(ranks, _cfg(), **_NET) as c:
+            out, rep = run_cluster_elastic(
+                u0, iters, c, ckpt_dir=ckpt_dir,
+                kill=(kill_rank, kill_it), revive_at=(kill_rank, revive_it),
+                heartbeat_interval_s=0.02, heartbeat_timeout_s=0.4)
+        wall = time.perf_counter() - t0
+    e = rep["elastic"]
+    row["fail_recover"] = {
+        "wall_s": round(wall, 4),
+        "killed_rank": kill_rank, "kill_iter": kill_it,
+        "revive_iter": revive_it,
+        "recoveries": e["recoveries"], "grows": e["grows"],
+        "dead_detected": e["dead"],
+        "recovery_stall_s": round(e["recovery_stall_s"], 6),
+        "bytes_migrated": e["bytes_migrated"],
+        "chunks_migrated": e["chunks_migrated"],
+        "heartbeats_missed": rep["monitor_stats"]["heartbeats_missed"],
+        "retries": rep["monitor_stats"]["retries"],
+        "epochs": rep["epochs"],
+        "faults": rep["faults"],
+        "bitwise_identical": bool(np.array_equal(out, base)),
+    }
+
+    # -- arm B: frozen-but-alive straggler -----------------------------
+    frz_rank, frz_it, frz_s = 1, 1, 0.8
+    t0 = time.perf_counter()
+    with Cluster(ranks, _cfg(), **_NET) as c:
+        out, rep = run_cluster_elastic(
+            u0, iters, c, slabs=2 * ranks,
+            freeze=(frz_rank, frz_it, frz_s),
+            heartbeat_interval_s=0.02, heartbeat_timeout_s=3.0,
+            straggler_factor=25.0)
+    wall = time.perf_counter() - t0
+    e = rep["elastic"]
+    row["straggler"] = {
+        "wall_s": round(wall, 4),
+        "frozen_rank": frz_rank, "freeze_s": frz_s,
+        "drains": e["drains"],
+        "stragglers_flagged": e["stragglers"],
+        "straggler_signals": {str(k): v for k, v in
+                              e["straggler_signals"].items()},
+        "dead_detected": e["dead"],        # must stay empty: alive!
+        "chunks_migrated": e["chunks_migrated"],
+        "bytes_migrated": e["bytes_migrated"],
+        "epochs": rep["epochs"],
+        "faults": rep["faults"],
+        "oracle_ok": bool(np.allclose(out, ref, rtol=1e-5, atol=1e-6)),
+    }
+    return row
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=48)
+    ap.add_argument("--iters", type=int, default=6)
+    ap.add_argument("--ranks", type=int, default=4)
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+    row = run_recover(n=args.n, iters=args.iters, ranks=args.ranks)
+    print(json.dumps(row, indent=2))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(row, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

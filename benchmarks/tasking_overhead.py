@@ -70,7 +70,7 @@ LADDER_BY_NAME = dict(LADDER)
 
 # rungs with their own workload/measurement, appended after the ladder
 EXTRA_RUNGS = ["SCHED-Locality", "MSG-Pipeline", "MSG-HOL",
-               "MSG-Congestion"]
+               "MSG-Congestion", "ELASTIC-Recover"]
 
 # subset of Runtime.stats() recorded per rung in the JSON report
 _REPORT_KEYS = ("staging_hits", "staging_misses", "request_pool_hits",
@@ -169,6 +169,15 @@ def bench_msg_congestion(samples: int = 30) -> Dict:
     evidence (window_adjusts / credits_deferred / window_min)."""
     import msgrate   # benchmarks/ is on sys.path when run as a script
     return msgrate.run_congestion(samples=samples)
+
+
+def bench_elastic_recover(iters: int = 6) -> Dict:
+    """ELASTIC-Recover rung: distributed Jacobi losing (and regaining) a
+    rank mid-run with checkpoint-backed live recovery, plus a frozen-but-
+    alive straggler whose chunks drain off it. The faulted run must match
+    the unfaulted elastic run bit-for-bit — no restart, bounded stall."""
+    import elastic_recover   # benchmarks/ is on sys.path as a script
+    return elastic_recover.run_recover(iters=max(iters, 4))
 
 
 def bench_config(name: str, overrides: Dict, n: int, iters: int,
@@ -285,6 +294,23 @@ def main(argv=None):
               f"hol_x{row['hol_ratio_adaptive']}_"
               f"goodput_x{row['goodput_ratio']}_"
               f"wmin{row['adaptive']['window_min']}")
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(row, f, indent=2)
+        return
+    if args.only == "ELASTIC-Recover":
+        row = bench_elastic_recover(iters=max(args.iters // 5, 4))
+        fr, st = row["fail_recover"], row["straggler"]
+        print(f"figELA_ELASTIC-Recover_fail,"
+              f"{fr['recovery_stall_s'] * 1e6:.1f},"
+              f"bytes{fr['bytes_migrated']}_"
+              f"bitwise{int(fr['bitwise_identical'])}")
+        print(f"figELA_ELASTIC-Recover_straggler,,"
+              f"drains{st['drains']}_chunks{st['chunks_migrated']}_"
+              f"alive{int(not st['dead_detected'])}")
+        print(f"figELA_ELASTIC-Recover_summary,,"
+              f"recoveries{fr['recoveries']}_grows{fr['grows']}_"
+              f"oracle{int(row['oracle_ok'])}")
         if args.json:
             with open(args.json, "w") as f:
                 json.dump(row, f, indent=2)

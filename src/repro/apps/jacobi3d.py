@@ -14,6 +14,13 @@ Four execution modes on the same numerics:
                     preregistered halo objects, and the result is gathered
                     back through the same protocol — the paper's §4.3
                     distributed Jacobi on the topology-aware pipeline.
+  run_cluster_elastic — run_cluster's numerics under the elastic fault-
+                    tolerance runtime: slabs are mobile chunks tracked by
+                    an OwnerMap, every iteration commits a checkpoint, and
+                    a fault schedule (kill / revive / freeze) exercises the
+                    detect → shrink → restore → resume loop live. The run
+                    survives losing a rank mid-flight with a bounded stall
+                    and NO restart, and the answer stays bit-identical.
   run_spmd        — production path: shard_map over a mesh axis with
                     ppermute halo exchange — the compiled TPU analogue;
                     ``bulk_sync=True`` emulates the MPI+CUDA baseline
@@ -27,7 +34,8 @@ from __future__ import annotations
 import dataclasses
 import functools
 import threading
-from typing import Dict, List, Optional, Tuple
+import time
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -277,6 +285,238 @@ def run_cluster(u0: np.ndarray, iters: int, cluster) -> np.ndarray:
         lo, hi = bounds[i]
         out[lo:hi] = ranks[0]._jacobi["gathered"][i].get()
     return out
+
+
+# ---------------------------------------------------------------------------
+# elastic fault-tolerant version (ISSUE: ELASTIC-Recover)
+# ---------------------------------------------------------------------------
+# Slabs are mobile chunks keyed ("jslab", i) in an OwnerMap; halo planes
+# land in per-slab objects ("jhalo", side, i) at the slab's CURRENT owner.
+# The driver never assumes the world is stable: each iteration snapshots
+# the elastic epoch under er.hold(), issues the halo puts against that
+# snapshot, and redoes the phase from scratch if a recovery or drain
+# bumped the epoch mid-exchange. Redo is safe because slabs only change
+# inside the committed update phase — a re-extracted face is bitwise the
+# face the first attempt extracted.
+
+@handler(name="jacobi_eslab")
+def _recv_eslab(ctx, obj):
+    ctx.rank.register_object(("jslab", ctx.message.user["slab"]), obj)
+
+
+@handler(name="jac_halo_mark")
+def _halo_mark(ctx, obj):
+    # obj is the preregistered halo target; None would mean the put beat
+    # the registration (can't happen: registration is driver-side, before
+    # the put issues) — refuse to mark rather than count lost data.
+    st = getattr(ctx.rank, "_jac_halos", None)
+    if st is None or obj is None:
+        return
+    with st["lock"]:
+        st["got"].add(ctx.message.object_key)
+
+
+def run_cluster_elastic(u0: np.ndarray, iters: int, cluster, *,
+                        slabs: Optional[int] = None,
+                        ckpt_dir: Optional[str] = None,
+                        kill: Optional[Tuple[int, int]] = None,
+                        revive_at: Optional[Tuple[int, int]] = None,
+                        freeze: Optional[Tuple[int, int, float]] = None,
+                        heartbeat_interval_s: float = 0.02,
+                        heartbeat_timeout_s: float = 0.5,
+                        straggler_factor: float = 25.0,
+                        poll_period_s: Optional[float] = None,
+                        wait_timeout_s: float = 120.0,
+                        ) -> Tuple[np.ndarray, Dict[str, Any]]:
+    """Distributed Jacobi that SURVIVES rank loss and stragglers mid-run.
+
+    ``kill=(rank, it)`` kills ``rank`` after iteration ``it`` commits its
+    checkpoint; ``revive_at=(rank, it)`` folds it back in with live
+    rebalancing migrations; ``freeze=(rank, it, secs)`` freezes a rank's
+    network (it keeps computing) so the straggler path drains chunks off
+    it. Recovery restores lost slabs from the per-iteration checkpoint —
+    exact committed bytes, so a faulted run matches an unfaulted one
+    bit-for-bit. Returns ``(result, report)``.
+    """
+    from repro.checkpoint.checkpointer import Checkpointer
+    from repro.distributed.elastic import ElasticRuntime
+    from repro.distributed.mobile_object import OwnerMap, block_distribution
+
+    ranks = cluster.ranks
+    n = len(ranks)
+    S = slabs or n
+    bounds = _slab_bounds(u0.shape[0], S)
+    owner = OwnerMap()
+    for i, r in block_distribution(S, n).items():
+        owner.assign(i, r)
+
+    faults = cluster.faults
+    if (kill or revive_at or freeze) and faults is None:
+        faults = cluster.fault_injector()
+    if kill is not None and ckpt_dir is None:
+        raise ValueError("kill schedule needs ckpt_dir: lost slabs are "
+                         "restored from the committed checkpoint")
+
+    ckpt = (Checkpointer(ckpt_dir, keep=3, async_save=False)
+            if ckpt_dir else None)
+
+    def restore_fn(oid):
+        step = ckpt.latest_step()
+        if step is None:
+            raise RuntimeError("rank loss before the first checkpoint")
+        return ckpt.restore_leaf(step, f"slab{oid}")
+
+    er = ElasticRuntime(
+        cluster, owner, key_fn=lambda oid: ("jslab", oid),
+        restore_fn=restore_fn if ckpt is not None else None,
+        monitor=0, heartbeat_interval_s=heartbeat_interval_s,
+        heartbeat_timeout_s=heartbeat_timeout_s,
+        straggler_factor=straggler_factor)
+
+    for r in ranks:
+        r._jac_halos = {"lock": threading.Lock(), "got": set()}
+
+    # -- scatter against the initial owner map -------------------------
+    for i, (lo, hi) in enumerate(bounds):
+        part = np.ascontiguousarray(u0[lo:hi])
+        dst = owner.owner(i)
+        obj = ranks[0].runtime.hetero_object(part)
+        if dst == 0:
+            ranks[0].register_object(("jslab", i), obj)
+        else:
+            ranks[0].send(dst, "jacobi_eslab", obj, user={"slab": i})
+    t_end = time.time() + wait_timeout_s
+    for i in range(S):
+        while ("jslab", i) not in ranks[owner.owner(i)].objects:
+            assert time.time() < t_end, f"scatter of slab {i} stalled"
+            time.sleep(0.002)
+
+    # kernels created once → per-shape jit cache hits on EVERY rank, so a
+    # migrated slab computes the same bits wherever it lands
+    def lo_face(u, out):
+        return u[0]
+
+    def hi_face(u, out):
+        return u[-1]
+
+    def update(u, l0, h0, z1, z2):
+        return stencil_update(u, l0, h0, z1, z1, z2, z2)
+
+    zcache: Dict[Tuple[int, Tuple[int, ...]], Tuple[Any, Any]] = {}
+
+    def zeros_for(r, s):
+        z = zcache.get((r.rank, s))
+        if z is None:
+            z = (r.runtime.hetero_object(np.zeros((s[0], s[2]), u0.dtype)),
+                 r.runtime.hetero_object(np.zeros((s[0], s[1]), u0.dtype)))
+            zcache[(r.rank, s)] = z
+        return z
+
+    def ensure_halos():
+        # halo targets must exist at a slab's current owner BEFORE any put
+        # for this epoch issues (registration is driver-side + in-process,
+        # so it happens-before the put's network delivery)
+        for i in range(S):
+            r = ranks[owner.owner(i)]
+            s = r.objects[("jslab", i)].shape
+            for side in ("lo", "hi"):
+                key = ("jhalo", side, i)
+                if key not in r.objects:
+                    r.register_object(key, r.runtime.hetero_object(
+                        np.zeros((s[1], s[2]), u0.dtype)))
+
+    def issue_halos():
+        expected = []
+        for i in range(S):
+            src = ranks[owner.owner(i)]
+            rt = src.runtime
+            slab = src.objects[("jslab", i)]
+            s = slab.shape
+            if i > 0:
+                f = rt.hetero_object(shape=(s[1], s[2]), dtype=u0.dtype)
+                rt.run(lo_face, [(slab, "r"), (f, "w")])
+                src.put(owner.owner(i - 1), ("jhalo", "hi", i - 1), f,
+                        on_done="jac_halo_mark", path="direct")
+                expected.append((owner.owner(i - 1), ("jhalo", "hi", i - 1)))
+            if i < S - 1:
+                f = rt.hetero_object(shape=(s[1], s[2]), dtype=u0.dtype)
+                rt.run(hi_face, [(slab, "r"), (f, "w")])
+                src.put(owner.owner(i + 1), ("jhalo", "lo", i + 1), f,
+                        on_done="jac_halo_mark", path="direct")
+                expected.append((owner.owner(i + 1), ("jhalo", "lo", i + 1)))
+        return expected
+
+    er.start(poll_period_s)
+    try:
+        for it in range(iters):
+            while True:               # redo loop: one pass per world epoch
+                with er.hold():
+                    epoch0 = er.epoch
+                    for r in ranks:
+                        with r._jac_halos["lock"]:
+                            r._jac_halos["got"].clear()
+                    ensure_halos()
+                    expected = issue_halos()
+                # wait outside the hold so the monitor can reshape the
+                # world underneath us; epoch bump → redo from scratch
+                t_end = time.time() + wait_timeout_s
+                done = False
+                while not done and er.epoch == epoch0:
+                    done = all(key in ranks[dst]._jac_halos["got"]
+                               for dst, key in expected)
+                    if done:
+                        break
+                    assert time.time() < t_end, \
+                        f"halo exchange stalled at iteration {it}"
+                    time.sleep(0.002)
+                if not done:
+                    continue
+                with er.hold():
+                    if er.epoch != epoch0:
+                        continue       # world changed after the wait; redo
+                    for i in range(S):
+                        r = ranks[owner.owner(i)]
+                        slab = r.objects[("jslab", i)]
+                        z1, z2 = zeros_for(r, slab.shape)
+                        r.runtime.run(
+                            update,
+                            [(slab, "rw"),
+                             (r.objects[("jhalo", "lo", i)], "r"),
+                             (r.objects[("jhalo", "hi", i)], "r"),
+                             (z1, "r"), (z2, "r")])
+                    alive = set(er.controller.alive_workers())
+                    for r in ranks:
+                        if r.rank in alive:
+                            r.runtime.barrier(timeout=wait_timeout_s)
+                    if ckpt is not None:
+                        ckpt.save(it, {
+                            f"slab{i}": np.asarray(
+                                ranks[owner.owner(i)]
+                                .objects[("jslab", i)].get())
+                            for i in range(S)}, block=True)
+                    break              # iteration committed
+            # fault schedule fires AFTER the commit point, so a restore
+            # replays exactly this iteration's bytes
+            if faults is not None:
+                if kill is not None and it == kill[1]:
+                    faults.kill_rank(kill[0])
+                if freeze is not None and it == freeze[1]:
+                    faults.freeze_rank(freeze[0], freeze[2])
+                if revive_at is not None and it == revive_at[1]:
+                    faults.revive_rank(revive_at[0])
+                    er.grow([revive_at[0]])
+    finally:
+        er.close()
+
+    report = er.report()
+    report["epochs"] = er.epoch
+    if faults is not None:
+        report["faults"] = dict(faults.stats)
+    out = np.empty_like(u0)
+    for i, (lo, hi) in enumerate(bounds):
+        out[lo:hi] = np.asarray(
+            ranks[owner.owner(i)].objects[("jslab", i)].get())
+    return out, report
 
 
 # ---------------------------------------------------------------------------

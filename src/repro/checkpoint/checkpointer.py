@@ -127,6 +127,19 @@ class Checkpointer:
         return jax.tree_util.tree_unflatten(
             jax.tree_util.tree_structure(abstract_state), leaves)
 
+    def restore_leaf(self, step: int, key: str) -> np.ndarray:
+        """Load ONE leaf of a committed checkpoint by its manifest key —
+        the elastic-recovery path: a rank died, only its chunks need
+        restoring, and re-reading the whole tree would stall recovery on
+        I/O proportional to the world size instead of the loss."""
+        d = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)["leaves"]
+        if key not in manifest:
+            raise KeyError(f"checkpoint step {step} has no leaf {key!r}; "
+                           f"has {sorted(manifest)[:8]}...")
+        return np.load(os.path.join(d, manifest[key]["file"]))
+
     def restore_latest(self, abstract_state: Any,
                        shardings: Optional[Any] = None) -> Any:
         step = self.latest_step()

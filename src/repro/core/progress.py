@@ -226,6 +226,20 @@ class ProgressEngine:
         with self._lock:
             return self._lanes.get((kind,) + key)
 
+    def backlogs(self) -> Dict[str, int]:
+        """Queue depth of every lane that currently has work backed up —
+        the diagnostic attached to barrier timeouts and the lane-pressure
+        signal straggler detection reads. Busy-but-draining lanes with an
+        empty queue report 0 and are omitted."""
+        with self._lock:
+            lanes = list(self._lanes.items())
+        out: Dict[str, int] = {}
+        for key, ln in lanes:
+            b = ln.backlog()
+            if b:
+                out["-".join(str(p) for p in key)] = b
+        return out
+
     def submit(self, kind: str, key: Any, fn: Callable[[], Any],
                fut: Optional[HFuture] = None,
                priority: int = 0) -> Optional[HFuture]:

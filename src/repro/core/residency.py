@@ -118,6 +118,17 @@ class ResidencyLedger:
         with self._lock:
             return self._pins.get(id(obj), 0) > 0
 
+    def forget(self, obj) -> None:
+        """Drop every replica of ``obj`` and clear its pins — the object
+        left this runtime entirely (elastic chunk migration: the source
+        rank must stop counting the bytes against its devices)."""
+        with self._lock:
+            devs = list(self._where.get(id(obj), ()))
+        for d in devs:
+            self.drop(d, obj)
+        with self._lock:
+            self._pins.pop(id(obj), None)
+
     def touch(self, device_id: int, obj) -> None:
         with self._lock:
             e = self._lru[device_id].get(id(obj))

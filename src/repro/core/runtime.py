@@ -137,6 +137,27 @@ class RuntimeConfig:
     # the next barrier instead of only being counted
     # (stats()["progress_errors"] / Rank.stats["handler_errors"])
     strict_errors: bool = False
+    # -- fault tolerance / elasticity (distributed layer) --
+    # heartbeat cadence: each rank's pump emits a 0-byte control-VC
+    # heartbeat to the monitor rank every interval; the elastic
+    # controller declares a rank dead after timeout without one
+    heartbeat_interval_s: float = 0.05
+    heartbeat_timeout_s: float = 0.5
+    # reliability layer (engaged by Cluster.fault_injector): eager
+    # messages, RTS announcements and stream tails are retransmitted with
+    # exponential backoff up to send_retries attempts before the send is
+    # counted failed; receivers NACK stalled rendezvous streams on the
+    # same backoff schedule
+    send_retries: int = 5
+    retry_backoff_s: float = 0.05
+    retry_backoff_mult: float = 2.0
+    retry_tick_s: float = 0.005
+    # protocol timeouts (formerly hardcoded): tail-upload wait when a
+    # rendezvous stream completes, the peer-removal sweep's net-send
+    # rendezvous, and the pump-thread join at shutdown
+    rdzv_finish_timeout_s: float = 120.0
+    peer_sweep_timeout_s: float = 10.0
+    pump_join_timeout_s: float = 5.0
 
 
 class Runtime:

@@ -228,6 +228,24 @@ class InterconnectModel:
             est.window_choice = cur
             return cur
 
+    def latency_outliers(self, sources, dst: int) -> Dict[int, float]:
+        """Per-source EWMA latency toward ``dst``, as a ratio against the
+        median across ``sources`` — the straggler-detection signal: a
+        frozen/overloaded rank's (fault-delayed) traffic inflates its
+        link latency while its peers' stays flat. Unmeasured links ratio
+        to 1.0 (no evidence is not evidence of slowness)."""
+        with self._lock:
+            lats = {}
+            for s in sources:
+                est = self._links.get((s, dst))
+                if est is not None and est.lat_samples > 0:
+                    lats[s] = est.latency
+        if not lats:
+            return {s: 1.0 for s in sources}
+        med = sorted(lats.values())[len(lats) // 2]
+        med = max(med, _MIN_SECONDS)
+        return {s: (lats[s] / med if s in lats else 1.0) for s in sources}
+
     def current_window(self, src: int, dst: int) -> Optional[int]:
         """The adaptive controller's current (src → dst) window, or None
         when no adaptive decision has been made on that link yet."""

@@ -1,6 +1,8 @@
-from repro.distributed.elastic import ElasticController, WorkerHealth  # noqa: F401
+from repro.distributed.elastic import (ElasticController,  # noqa: F401
+                                       ElasticRuntime, WorkerHealth)
 from repro.distributed.handlers import handler, registered, resolve  # noqa: F401
-from repro.distributed.messaging import Cluster, HandlerContext, Message, Rank  # noqa: F401
+from repro.distributed.messaging import (Cluster, FaultInjector,  # noqa: F401
+                                         HandlerContext, Message, Rank)
 from repro.distributed.mobile_object import (MobileObject, MobilePtr,  # noqa: F401
                                              OwnerMap, block_distribution,
                                              rebalance_greedy)

@@ -74,12 +74,14 @@ and the single-node multi-device execution engine.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import itertools
 import queue
+import random
 import threading
 import time
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
@@ -106,7 +108,9 @@ _FLUSH = object()            # pump wake-up sentinel (not a Message)
 PRIO_CONTROL = 0
 PRIO_EAGER = 1
 PRIO_BULK = 2
-_CONTROL_KINDS = frozenset({"cts", "ack", "credit", "get"})
+_CONTROL_KINDS = frozenset({"cts", "ack", "credit", "get", "nack"})
+# bounded memory for the reliability layer's duplicate-suppression set
+_SEEN_CAP = 2048
 
 
 def msg_priority(msg: "Message", nbytes: int) -> int:
@@ -181,6 +185,12 @@ class Message:
     # grant time — the congestion signals the controller fed on
     rx_queue: int = 0
     rx_slab_bytes: int = 0
+    # -- reliability layer (engaged by Cluster.fault_injector) --
+    # the receiver must acknowledge delivery; the sender retransmits with
+    # backoff until the ack arrives or the retry budget is spent
+    ack_req: bool = False
+    # 'nack' only: chunk seqs the receiver is still missing mid-stream
+    missing: Optional[Tuple[int, ...]] = None
 
 
 class Rank:
@@ -209,6 +219,22 @@ class Rank:
         self._rdzv_out: Dict[int, Dict[str, Any]] = {}
         self._rdzv_in: Dict[int, Dict[str, Any]] = {}
         self._rdzv_bufs: Dict[int, Tuple[int, np.ndarray]] = {}
+        # -- reliability layer (off unless Cluster.fault_injector engaged
+        # it): unacked reliable sends awaiting receiver acks, fully
+        # transmitted rendezvous streams awaiting their completion ack
+        # (kept resendable for NACK recovery), and the bounded
+        # duplicate-suppression set of completed deliveries
+        self._reliability = False
+        self._unacked: Dict[int, Dict[str, Any]] = {}
+        self._unacked_lock = threading.Lock()
+        self._rdzv_sent: Dict[int, Dict[str, Any]] = {}
+        self._seen: Set[int] = set()
+        self._seen_order: "collections.deque[int]" = collections.deque()
+        # heartbeat emission (enable_heartbeat): monitor rank + cadence
+        self._hb_dst: Optional[int] = None
+        self._hb_every = 0.0
+        self._hb_next = 0.0
+        self._tick_next = 0.0
         # typed progress-engine lanes on the runtime's shared reactor:
         # net-send streams rendezvous chunks (the pump never transmits a
         # payload window itself), net-recv completes incoming streams
@@ -239,7 +265,16 @@ class Rank:
                       "window_adjusts": 0, "credits_deferred": 0,
                       "window_min": 0, "rx_queue_peak": 0,
                       # pump handler exceptions routed to the error sink
-                      "handler_errors": 0}
+                      "handler_errors": 0,
+                      # -- fault tolerance / elasticity --
+                      # reliability-layer retransmissions, duplicates
+                      # suppressed, sends abandoned after the retry
+                      # budget, heartbeats emitted; the elastic layer
+                      # fills in missed beats, chunks landed here by
+                      # migration, and the cumulative recovery stall
+                      "retries": 0, "dup_dropped": 0, "send_failures": 0,
+                      "heartbeats_out": 0, "heartbeats_missed": 0,
+                      "chunks_migrated": 0, "recovery_stall_s": 0.0}
         # bounded trace of swallowed pump-handler errors (strict mode
         # re-raises the first at the next Cluster.barrier)
         self._errors: List[BaseException] = []
@@ -265,6 +300,9 @@ class Rank:
                        dst=dst, handler=handler_name, user=user, path=path,
                        consumer_device=consumer_device)
         if obj is None:
+            if self._reliability:
+                meta.ack_req = True
+                self._track_unacked([meta])
             self.cluster.deliver(meta)
             self.stats["sent"] += 1
             fut.set_result(None)
@@ -345,6 +383,9 @@ class Rank:
                           dst=dst, object_key=object_key, payload=arr,
                           handler=on_done, path=used_path,
                           consumer_device=consumer_device)
+            if self._reliability:
+                msg.ack_req = True
+                self._track_unacked([msg])
             self.cluster.deliver(msg)
             self.stats["sent"] += 1
             self.stats["bytes_out"] += arr.nbytes
@@ -379,6 +420,190 @@ class Rank:
         directly instead of on the least-loaded fallback."""
         self.routes[handler_name] = device_id
 
+    def enable_heartbeat(self, monitor: int,
+                         interval_s: Optional[float] = None) -> None:
+        """Emit a 0-byte ``elastic_heartbeat`` control message to rank
+        ``monitor`` every ``interval_s`` (default
+        ``RuntimeConfig.heartbeat_interval_s``) from the pump loop. The
+        heartbeat rides the billed control VC like any other control
+        message — liveness signalling is not free on a congested link,
+        which is exactly why the elastic layer also reads latency/backlog
+        telemetry instead of trusting heartbeat timing alone."""
+        self._hb_every = interval_s if interval_s is not None \
+            else self.runtime.cfg.heartbeat_interval_s
+        self._hb_dst = monitor
+        self._hb_next = 0.0
+
+    # -- reliability layer (retry / ack / nack; fault-injection mode) ---
+    def _track_unacked(self, msgs: List[Message]) -> None:
+        """Register a reliable send: ``msgs`` (a meta and its optional
+        payload half) are retransmitted together on a backoff schedule
+        until the receiver's delivery ack clears them."""
+        m0 = msgs[0]
+        with self._unacked_lock:
+            self._unacked[m0.msg_id] = {
+                "msgs": list(msgs), "dst": m0.dst, "attempts": 0,
+                "deadline": time.perf_counter()
+                + self.runtime.cfg.retry_backoff_s}
+
+    def _ack_unacked(self, msg_id: int) -> None:
+        with self._unacked_lock:
+            self._unacked.pop(msg_id, None)
+
+    def _mark_done(self, msg: Message, ack: bool = True) -> None:
+        """Delivery completed under the reliability layer: remember the
+        msg_id (bounded) so a straggling retransmission is suppressed as
+        a duplicate, and ack the sender when it asked."""
+        if not self._reliability:
+            return
+        if msg.msg_id not in self._seen:
+            self._seen.add(msg.msg_id)
+            self._seen_order.append(msg.msg_id)
+            while len(self._seen_order) > _SEEN_CAP:
+                self._seen.discard(self._seen_order.popleft())
+        if ack and msg.ack_req:
+            self.cluster.deliver(Message(msg_id=msg.msg_id, kind="ack",
+                                         src=self.rank, dst=msg.src))
+
+    def _tick(self) -> None:
+        """Pump-loop housekeeping (throttled to ``retry_tick_s``): emit
+        the periodic heartbeat, retransmit overdue unacked sends and
+        rendezvous tails, and NACK incoming streams that stalled."""
+        now = time.perf_counter()
+        if now < self._tick_next:
+            return
+        self._tick_next = now + self.runtime.cfg.retry_tick_s
+        if self._hb_dst is not None and now >= self._hb_next:
+            self._hb_next = now + self._hb_every
+            self.stats["heartbeats_out"] += 1
+            self.cluster.deliver(Message(
+                msg_id=next(_msg_ids), kind="meta", src=self.rank,
+                dst=self._hb_dst, handler="elastic_heartbeat",
+                user={"worker": self.rank}))
+        if self._reliability:
+            self._retry_unacked(now)
+            self._retry_tails(now)
+            self._nack_stalled_streams(now)
+
+    def _retry_unacked(self, now: float) -> None:
+        """Retransmit reliable sends whose ack is overdue, with
+        exponential backoff; a send that exhausts ``send_retries`` is
+        abandoned and counted in ``send_failures`` (the elastic layer —
+        not the transport — decides what a persistent failure means)."""
+        cfg = self.runtime.cfg
+        with self._unacked_lock:
+            items = list(self._unacked.items())
+        gone = []
+        for mid, st in items:
+            if now < st["deadline"]:
+                continue
+            st["attempts"] += 1
+            if st["attempts"] > cfg.send_retries:
+                gone.append(mid)
+                self.stats["send_failures"] += 1
+                continue
+            st["deadline"] = now + cfg.retry_backoff_s \
+                * (cfg.retry_backoff_mult ** st["attempts"])
+            self.stats["retries"] += 1
+            for m in st["msgs"]:
+                self.cluster.deliver(m)
+        if gone:
+            with self._unacked_lock:
+                for mid in gone:
+                    self._unacked.pop(mid, None)
+
+    def _retry_tails(self, now: float) -> None:
+        """A fully transmitted rendezvous stream whose completion ack is
+        overdue gets its LAST chunk resent: if the tail chunk was lost
+        the receiver can now finish; if only the ack was lost the
+        receiver re-acks the orphan chunk (``_receive_chunk``), releasing
+        the parked pool buffer either way."""
+        cfg = self.runtime.cfg
+        for mid, st in list(self._rdzv_sent.items()):
+            if now < st["deadline"]:
+                continue
+            st["attempts"] += 1
+            if st["attempts"] > cfg.send_retries:
+                self._rdzv_sent.pop(mid, None)
+                parked = self._rdzv_bufs.pop(mid, None)
+                if parked is not None:
+                    self.runtime.staging.release(parked[1])
+                self.stats["send_failures"] += 1
+                continue
+            st["deadline"] = now + cfg.retry_backoff_s \
+                * (cfg.retry_backoff_mult ** st["attempts"])
+            meta, flat, elems = st["meta"], st["flat"], st["elems"]
+            k = meta.nchunks - 1
+            self.stats["retries"] += 1
+            self.cluster.deliver(Message(
+                msg_id=mid, kind="chunk", src=self.rank, dst=meta.dst,
+                seq=k, offset=k * elems, nchunks=meta.nchunks,
+                payload=flat[k * elems:(k + 1) * elems], path=meta.path))
+
+    def _nack_stalled_streams(self, now: float) -> None:
+        """Receiver-side loss recovery: an incomplete incoming stream
+        that made no progress for a backoff interval gets a NACK naming
+        the missing chunk seqs (capped) — the sender resends exactly
+        those. A stream that stays dry past the retry budget is swept
+        (the peer-loss path will also reap it)."""
+        cfg = self.runtime.cfg
+        for mid, st in list(self._rdzv_in.items()):
+            meta = st["meta"]
+            if st["arrived"] >= meta.nchunks:
+                continue
+            nacks = st.get("nacks", 0)
+            backoff = cfg.retry_backoff_s * (cfg.retry_backoff_mult ** nacks)
+            if now - st.get("last_progress", now) < backoff:
+                continue
+            st["nacks"] = nacks + 1
+            st["last_progress"] = now
+            if st["nacks"] > cfg.send_retries:
+                self._rdzv_in.pop(mid, None)
+                self.stats["send_failures"] += 1
+                continue
+            have = st["uploads"]
+            missing = tuple(k for k in range(meta.nchunks)
+                            if k not in have)[:64]
+            if not missing:
+                continue
+            self.cluster.deliver(Message(
+                msg_id=mid, kind="nack", src=self.rank, dst=meta.src,
+                credits=len(missing), window=st["win"],
+                acked=st["completed"], missing=missing))
+
+    def _handle_nack(self, msg: Message) -> None:
+        """Net-send lane only: the receiver is missing chunks. Already
+        transmitted seqs are resent from the parked payload (live stream
+        or awaiting-ack tail); never transmitted seqs mean the credits
+        were lost — fold the NACK in as a credit grant so the stream
+        moves again."""
+        st = self._rdzv_out.get(msg.msg_id)
+        flat = elems = meta = None
+        if st is not None:
+            meta, flat, elems = st["meta"], st["flat"], st["elems"]
+            cutoff = st["next_seq"]
+        else:
+            sent = self._rdzv_sent.get(msg.msg_id)
+            if sent is None:
+                return
+            meta, flat, elems = sent["meta"], sent["flat"], sent["elems"]
+            cutoff = meta.nchunks
+        fresh = 0
+        for k in (msg.missing or ()):
+            if k >= cutoff:
+                fresh += 1
+                continue
+            self.stats["retries"] += 1
+            self.stats["chunks_out"] += 1
+            self.cluster.deliver(Message(
+                msg_id=msg.msg_id, kind="chunk", src=self.rank,
+                dst=meta.dst, seq=k, offset=k * elems,
+                nchunks=meta.nchunks,
+                payload=flat[k * elems:(k + 1) * elems], path=meta.path))
+        if fresh and st is not None:
+            self._advance_stream(msg.msg_id, fresh, window=msg.window,
+                                 acked=msg.acked)
+
     def enqueue(self, item: Any, priority: int = PRIO_CONTROL) -> None:
         """Post a message (or pump sentinel) to this rank's inbox at the
         given virtual-channel priority; FIFO within a priority class."""
@@ -391,6 +616,8 @@ class Rank:
         thread wake in the per-chunk credit loop, which is the loop's
         critical path. Returns True when the message was consumed."""
         if msg.kind == "cts" or msg.kind == "credit":
+            if msg.kind == "cts":
+                self._ack_unacked(msg.msg_id)   # RTS confirmed received
             if self._stop:
                 return True        # rank leaving: drop stream advances
             try:
@@ -400,6 +627,14 @@ class Rank:
                     self._advance_stream(mid, c, window=w, acked=a,
                                          initial=init))
             except RuntimeError:   # lane stopped mid-shutdown: drop
+                pass
+            return True
+        if msg.kind == "nack":
+            if self._stop:
+                return True
+            try:
+                self._net_send.submit(lambda m=msg: self._handle_nack(m))
+            except RuntimeError:
                 pass
             return True
         return False
@@ -469,14 +704,23 @@ class Rank:
                 self._start_rendezvous(meta, arr, nbytes, pooled)
                 continue
             self.stats["eager"] += 1
+            if self._reliability:
+                meta.ack_req = True
             if meta.path != "direct" and nbytes <= INLINE_PAYLOAD_BYTES:
                 meta.inline = np.asarray(arr).tobytes()  # §4.2.3 small msgs
+                if self._reliability:
+                    self._track_unacked([meta])
                 self.cluster.deliver(meta)
             else:
-                self.cluster.deliver(meta)
                 payload = Message(msg_id=meta.msg_id, kind="payload",
                                   src=self.rank, dst=meta.dst, payload=arr,
                                   path=meta.path)
+                if self._reliability:
+                    # meta+payload retransmit as a unit: whichever half
+                    # was dropped, the receiver's pairing logic re-pairs
+                    # and the duplicate half is suppressed
+                    self._track_unacked([meta, payload])
+                self.cluster.deliver(meta)
                 self.cluster.deliver(payload)
             self.stats["sent"] += 1
             self.stats["bytes_out"] += nbytes
@@ -513,6 +757,11 @@ class Rank:
         }
         self.stats["rendezvous"] += 1
         self.stats["sent"] += 1
+        if self._reliability:
+            # the RTS retransmits until the CTS clears it: a dropped
+            # announcement (or a dropped CTS — the receiver re-CTSes a
+            # duplicate RTS for a chunkless stream) cannot hang the send
+            self._track_unacked([meta])
         self.cluster.deliver(meta)
 
     def _advance_stream(self, msg_id: int, credits: int,
@@ -572,6 +821,14 @@ class Rank:
             # staging buffer stays parked until the completion ack
             if state["pooled"]:
                 self._rdzv_bufs[msg_id] = (meta.dst, state["arr"])
+            if self._reliability:
+                # keep the payload resendable until the completion ack:
+                # a lost tail chunk (or a NACK) replays from here
+                self._rdzv_sent[msg_id] = {
+                    "meta": meta, "flat": flat, "elems": elems,
+                    "dst": meta.dst, "attempts": 0,
+                    "deadline": time.perf_counter()
+                    + self.runtime.cfg.retry_backoff_s}
             del self._rdzv_out[msg_id]
 
     # -- rendezvous protocol (receiver side) ---------------------------
@@ -606,6 +863,15 @@ class Rank:
         ADAPTIVE: the controller starts from the BDP but already folds in
         this rank's live transfer-lane backlog and slab occupancy, and
         every subsequent credit decision re-targets it mid-stream."""
+        prior = self._rdzv_in.get(meta.msg_id)
+        if prior is not None:       # retransmitted / duplicated RTS
+            self.stats["dup_dropped"] += 1
+            if prior["arrived"] == 0 and prior.get("cts") is not None:
+                # no chunk ever arrived: the original CTS was likely
+                # lost — resend it (double-granting is safe: the
+                # sender's window-hold caps in-flight regardless)
+                self.cluster.deliver(prior["cts"])
+            return
         dev = self._landing_device(meta)
         rt = self.runtime
         chunk_b = max(meta.total_bytes // max(meta.nchunks, 1), 1)
@@ -631,6 +897,10 @@ class Rank:
             "win": window,           # current window target
             "outstanding": window,   # chunks granted but not yet uploaded
             "completed": 0,          # cumulative uploads retired (acked)
+            # -- reliability layer --
+            "cts": None,             # kept resendable for duplicate RTS
+            "last_progress": time.perf_counter(),
+            "nacks": 0,
         }
         device = rt._device(dev)
         if meta.nchunks > 1 and getattr(device, "jax_device", None) \
@@ -648,11 +918,12 @@ class Rank:
         self._rdzv_in[meta.msg_id] = state
         if window < self.stats["window_min"] or not self.stats["window_min"]:
             self.stats["window_min"] = window
-        self.cluster.deliver(Message(msg_id=meta.msg_id, kind="cts",
-                                     src=self.rank, dst=meta.src,
-                                     credits=window, window=window,
-                                     rx_queue=rx_queue,
-                                     rx_slab_bytes=slab_bytes))
+        cts = Message(msg_id=meta.msg_id, kind="cts",
+                      src=self.rank, dst=meta.src,
+                      credits=window, window=window,
+                      rx_queue=rx_queue, rx_slab_bytes=slab_bytes)
+        state["cts"] = cts
+        self.cluster.deliver(cts)
 
     def _return_credit(self, msg_id: int, dst: int,
                        state: Dict[str, Any]) -> None:
@@ -714,7 +985,17 @@ class Rank:
         sender's window forward, or deliberately lets it shrink."""
         state = self._rdzv_in.get(msg.msg_id)
         if state is None:
+            if self._reliability and msg.msg_id in self._seen:
+                # resent tail of a stream that already completed: the
+                # completion ack was lost — re-ack so the sender releases
+                # its parked buffer and retires the tail timer
+                self.cluster.deliver(Message(msg_id=msg.msg_id, kind="ack",
+                                             src=self.rank, dst=msg.src))
             return   # stream swept (peer removed) — drop the orphan chunk
+        if msg.seq in state["uploads"]:
+            self.stats["dup_dropped"] += 1   # duplicated/replayed chunk
+            return
+        state["last_progress"] = time.perf_counter()
         rt, dev = self.runtime, state["dev"]
         payload, offset = msg.payload, msg.offset
         direct = msg.path == "direct" and not isinstance(payload, np.ndarray)
@@ -777,9 +1058,21 @@ class Rank:
                 if seq != last_seq and fut.done():
                     self.stats["overlap_bytes"] += nb
             parts = []
+            timeout = self.runtime.cfg.rdzv_finish_timeout_s
             for k in range(meta.nchunks):
                 fut, _ = uploads[k]
-                parts.append(fut.get(timeout=120))
+                try:
+                    parts.append(fut.get(timeout=timeout))
+                except TimeoutError:
+                    raise TimeoutError(
+                        f"rank {self.rank}: rendezvous stream "
+                        f"{msg_id} from rank {meta.src} "
+                        f"({meta.total_bytes} B, op={meta.op!r}): chunk "
+                        f"{k}/{meta.nchunks} upload did not complete "
+                        f"within {timeout:.0f}s on device {dev}'s "
+                        "transfer lane "
+                        f"(backlog={self._transfer_backlog(dev)})"
+                    ) from None
                 self.runtime.futures.release(fut)
             if state["slab"] is not None:
                 assembled = state["slab"].reshape(meta.payload_shape)
@@ -798,6 +1091,7 @@ class Rank:
                         assembled = self.runtime._device(dev).upload(
                             assembled)
                     self.runtime.rebind_device_copy(target, assembled, dev)
+                self._mark_done(meta, ack=False)  # explicit ack follows
                 self.cluster.deliver(Message(msg_id=msg_id, kind="ack",
                                              src=self.rank, dst=meta.src))
                 if meta.handler:
@@ -805,6 +1099,7 @@ class Rank:
                 return
             obj = self.runtime.adopt_device_array(assembled, dev)
             # completion ack: the sender recycles its parked pool buffer
+            self._mark_done(meta, ack=False)
             self.cluster.deliver(Message(msg_id=msg_id, kind="ack",
                                          src=self.rank, dst=meta.src))
             self._invoke(meta, obj)
@@ -812,10 +1107,20 @@ class Rank:
             self._rdzv_in.pop(msg_id, None)
 
     def _handle(self, msg: Message):
+        if self._reliability and msg.msg_id in self._seen \
+                and msg.kind in ("meta", "payload", "put", "get"):
+            # retransmission of a delivery that already completed: drop,
+            # but re-ack so the sender stops resending (its ack was lost)
+            self.stats["dup_dropped"] += 1
+            if msg.ack_req:
+                self.cluster.deliver(Message(msg_id=msg.msg_id, kind="ack",
+                                             src=self.rank, dst=msg.src))
+            return
         if msg.kind == "meta":
             self.stats["received"] += 1
             if msg.payload_shape is None:
                 self._invoke(msg, None)
+                self._mark_done(msg)
             elif msg.protocol == "rdzv":
                 self._prepare_rendezvous(msg)
             elif msg.inline is not None:
@@ -823,6 +1128,7 @@ class Rank:
                                     ).reshape(msg.payload_shape).copy()
                 obj = self.runtime.hetero_object(arr)
                 self._invoke(msg, obj)
+                self._mark_done(msg)
             else:
                 prior = self._pending_meta.pop(msg.msg_id, None)
                 if prior is not None and prior.kind == "payload":
@@ -830,6 +1136,7 @@ class Rank:
                     # (control and data ride different virtual channels)
                     obj = self._adopt_payload(prior, msg)
                     self._invoke(msg, obj)
+                    self._mark_done(msg)
                 else:
                     self._pending_meta[msg.msg_id] = msg
         elif msg.kind == "cts" or msg.kind == "credit":
@@ -845,6 +1152,8 @@ class Rank:
             parked = self._rdzv_bufs.pop(msg.msg_id, None)
             if parked is not None:
                 self.runtime.staging.release(parked[1])
+            self._rdzv_sent.pop(msg.msg_id, None)
+            self._ack_unacked(msg.msg_id)
         elif msg.kind == "payload":
             meta = self._pending_meta.pop(msg.msg_id, None)
             if meta is None:       # payload raced ahead of metadata
@@ -852,6 +1161,7 @@ class Rank:
                 return
             obj = self._adopt_payload(msg, meta)
             self._invoke(meta, obj)
+            self._mark_done(meta)
         elif msg.kind == "put":
             self.stats["received"] += 1
             target = self.objects.get(msg.object_key)
@@ -876,6 +1186,7 @@ class Rank:
                     target.release()
             if msg.handler:
                 self._invoke(msg, target)
+            self._mark_done(msg)
         elif msg.kind == "get":
             self.stats["received"] += 1
             src_obj = self.objects.get(msg.object_key)
@@ -883,6 +1194,7 @@ class Rank:
                       user={"object_key": msg.object_key},
                       path=msg.path or "host",
                       consumer_device=msg.consumer_device)
+            self._mark_done(msg)
 
     def _land_direct(self, payload: Any, device_id: int) -> Any:
         """One Device API D2D landing for a foreign (cross-rank) device
@@ -931,6 +1243,8 @@ class Rank:
     def _pump(self):
         while not self._stop:
             self._flush_outgoing()
+            if self._hb_dst is not None or self._reliability:
+                self._tick()
             try:
                 _prio, _seq, msg = self.inbox.get(timeout=0.001)
             except queue.Empty:
@@ -970,10 +1284,14 @@ class Rank:
     def state_gauges(self) -> Dict[str, int]:
         """Leak gauges: live rendezvous/protocol state entries. All zero
         once every stream completed or was swept."""
+        with self._unacked_lock:
+            unacked = len(self._unacked)
         return {"rdzv_out": len(self._rdzv_out),
                 "rdzv_in": len(self._rdzv_in),
                 "rdzv_bufs": len(self._rdzv_bufs),
-                "pending_meta": len(self._pending_meta)}
+                "pending_meta": len(self._pending_meta),
+                "rdzv_sent": len(self._rdzv_sent),
+                "unacked": unacked}
 
     def _sweep_out_streams(self, peer: Optional[int] = None
                            ) -> Dict[str, int]:
@@ -985,13 +1303,17 @@ class Rank:
         must run THERE (or after the lane is joined, at shutdown) —
         never concurrently with ``_advance_stream``, which may still be
         handing out zero-copy views of the very buffer being released."""
-        swept = {"rdzv_out": 0, "rdzv_bufs": 0}
+        swept = {"rdzv_out": 0, "rdzv_bufs": 0, "rdzv_sent": 0}
         for mid, st in list(self._rdzv_out.items()):
             if peer is None or st["meta"].dst == peer:
                 del self._rdzv_out[mid]
                 if st["pooled"]:
                     self.runtime.staging.release(st["arr"])
                 swept["rdzv_out"] += 1
+        for mid, st in list(self._rdzv_sent.items()):
+            if peer is None or st["dst"] == peer:
+                del self._rdzv_sent[mid]
+                swept["rdzv_sent"] += 1
         for mid, (dst, buf) in list(self._rdzv_bufs.items()):
             if peer is None or dst == peer:
                 del self._rdzv_bufs[mid]
@@ -1023,26 +1345,147 @@ class Rank:
         ``_rdzv_out``/``_rdzv_bufs``), so it cannot race a concurrent
         ``_advance_stream``; the receive-side sweep runs here. Returns
         the per-kind swept counts."""
+        timeout = self.runtime.cfg.peer_sweep_timeout_s
         try:
             fut: HFuture = HFuture()
             self._net_send.submit(
                 lambda p=peer: self._sweep_out_streams(p), fut)
-            swept = dict(fut.get(timeout=10))
+            swept = dict(fut.get(timeout=timeout))
         except RuntimeError:       # lane already stopped: sweep inline
             swept = dict(self._sweep_out_streams(peer))
+        except TimeoutError:
+            raise TimeoutError(
+                f"rank {self.rank}: removing peer {peer}: the net-send "
+                f"lane did not run the stream sweep within {timeout:.0f}s "
+                f"(lane backlog={self._net_send.backlog()}, "
+                f"live streams={sorted(self._rdzv_out)})") from None
+        with self._unacked_lock:
+            for mid in [m for m, st in self._unacked.items()
+                        if st["dst"] == peer]:
+                del self._unacked[mid]
         swept.update(self._sweep_in_state(peer))
+        return swept
+
+    def reset_peer_state(self) -> Dict[str, int]:
+        """Full protocol-state reset after THIS rank rejoins from a
+        partition/freeze (elastic grow): every parked stream, pending
+        retransmit and reassembly entry refers to a world that moved on
+        — sweep them all so the rank starts clean."""
+        swept = self.remove_peer(None)  # peer=None sweeps every peer
+        with self._unacked_lock:
+            self._unacked.clear()
         return swept
 
     def shutdown(self):
         self._stop = True
         self.enqueue(None)
-        self._thread.join(timeout=5)
+        self._thread.join(timeout=self.runtime.cfg.pump_join_timeout_s)
         self.runtime.shutdown()
         # lanes are drained and joined: release whatever rendezvous
         # state in-flight shutdown stranded (pooled buffers back to the
         # pool, reassembly/metadata entries dropped)
         self._sweep_out_streams()
         self._sweep_in_state()
+
+
+class FaultInjector:
+    """Deterministic fault injection at the simulated network layer.
+
+    Faults are modeled where real ones happen — on the wire and at the
+    endpoints — so every recovery mechanism above (retries, NACKs,
+    heartbeat detection, peer sweeps, chunk migration) is exercised by
+    the same code paths production traffic uses:
+
+    - ``kill_rank``: full partition — every message to OR from the rank
+      is dropped (the process is "gone" to the network; its local pump
+      keeps spinning, which is what a crashed-but-undetected peer looks
+      like to everyone else).
+    - ``freeze_rank``: straggler — messages touching the rank are
+      delayed by the remaining freeze time (and observed into the
+      ``InterconnectModel`` as latency samples, which is precisely the
+      EWMA signal straggler detection reads). The rank keeps computing.
+    - ``set_link``: per-directed-link loss/duplication/extra delay, each
+      applied per message from a seeded RNG — deterministic for a fixed
+      seed and delivery order.
+
+    All decisions come from one seeded ``random.Random`` under a lock;
+    ``stats`` counts every injected event."""
+
+    def __init__(self, cluster: "Cluster", seed: int = 0):
+        self.cluster = cluster
+        self.rng = random.Random(seed)
+        self._lock = threading.Lock()
+        self.dead: Set[int] = set()
+        self.frozen: Dict[int, float] = {}     # rank -> thaw instant
+        self.links: Dict[Tuple[int, int], Dict[str, float]] = {}
+        self.stats = {"dropped": 0, "duplicated": 0, "delayed": 0,
+                      "kills": 0, "freezes": 0}
+
+    # -- fault controls -------------------------------------------------
+    def kill_rank(self, rank: int) -> None:
+        with self._lock:
+            self.dead.add(rank)
+            self.stats["kills"] += 1
+
+    def revive_rank(self, rank: int) -> None:
+        with self._lock:
+            self.dead.discard(rank)
+
+    def freeze_rank(self, rank: int, seconds: float) -> None:
+        """Delay all traffic touching ``rank`` for ``seconds`` from now
+        (extends an active freeze rather than stacking)."""
+        with self._lock:
+            self.frozen[rank] = max(self.frozen.get(rank, 0.0),
+                                    time.perf_counter() + seconds)
+            self.stats["freezes"] += 1
+
+    def is_frozen(self, rank: int) -> bool:
+        return self._frozen_for(rank) > 0.0
+
+    def _frozen_for(self, rank: int) -> float:
+        thaw = self.frozen.get(rank)
+        if thaw is None:
+            return 0.0
+        remaining = thaw - time.perf_counter()
+        if remaining <= 0:
+            self.frozen.pop(rank, None)
+            return 0.0
+        return remaining
+
+    def set_link(self, src: int, dst: int, drop: float = 0.0,
+                 dup: float = 0.0, delay_s: float = 0.0) -> None:
+        """Per-directed-link fault profile: each message (src → dst) is
+        dropped with probability ``drop``, duplicated with ``dup``, and
+        delayed an extra ``delay_s``."""
+        self.links[(src, dst)] = {"drop": drop, "dup": dup,
+                                  "delay_s": delay_s}
+
+    def clear_link(self, src: int, dst: int) -> None:
+        self.links.pop((src, dst), None)
+
+    # -- the interception point ----------------------------------------
+    def intercept(self, msg: Message) -> Tuple[bool, float, bool]:
+        """Fault decision for one message: (drop, extra_delay_s,
+        duplicate)."""
+        with self._lock:
+            if msg.src in self.dead or msg.dst in self.dead:
+                self.stats["dropped"] += 1
+                return True, 0.0, False
+            delay = max(self._frozen_for(msg.src),
+                        self._frozen_for(msg.dst))
+            link = self.links.get((msg.src, msg.dst))
+            dup = False
+            if link is not None:
+                if link["drop"] and self.rng.random() < link["drop"]:
+                    self.stats["dropped"] += 1
+                    return True, 0.0, False
+                if link["dup"] and self.rng.random() < link["dup"]:
+                    dup = True
+                    self.stats["duplicated"] += 1
+                delay += link["delay_s"]
+            if delay > 0:
+                self.stats["delayed"] += 1
+            return False, delay, dup
 
 
 @dataclasses.dataclass
@@ -1094,7 +1537,7 @@ class Cluster:
     protocol sizes its chunks and credit windows from the measured
     bandwidth-delay product of the (src, dst) pair."""
 
-    _CONTROL_KINDS = frozenset({"cts", "ack", "credit", "get"})
+    _CONTROL_KINDS = frozenset({"cts", "ack", "credit", "get", "nack"})
 
     def __init__(self, n_ranks: int, rt_config: Optional[RuntimeConfig] = None,
                  latency_s: float = 0.0, bw_bytes_per_s: float = 0.0,
@@ -1117,7 +1560,22 @@ class Cluster:
         self._ctrl_free: Dict[Tuple[int, int], float] = {}
         self._ctrl_lock = threading.Lock()
         self.ctrl_stats = {"msgs": 0, "queued_s": 0.0}
+        # fault injection (None = perfect network, zero overhead on the
+        # delivery path beyond one attribute check)
+        self.faults: Optional[FaultInjector] = None
+        self._elastic = None       # bound by ElasticRuntime
         self.ranks = [Rank(self, r, rt_config) for r in range(n_ranks)]
+
+    def fault_injector(self, seed: int = 0) -> "FaultInjector":
+        """Attach deterministic fault injection and engage the
+        reliability layer (ack/retry/NACK retransmission) on every rank —
+        an injected drop then surfaces as a retransmit, never a hang.
+        Idempotent; returns the injector."""
+        if self.faults is None:
+            self.faults = FaultInjector(self, seed)
+        for r in self.ranks:
+            r._reliability = True
+        return self.faults
 
     @staticmethod
     def _sleep_until(deadline: float) -> None:
@@ -1145,15 +1603,65 @@ class Cluster:
         return 2 if msg.kind == "chunk" else 1
 
     def deliver(self, msg: Message):
-        """Hand a message to the network. Never blocks the caller: when
-        the simulated link has a nonzero delay the message is queued on a
-        link lane (cut-through — the LINK serializes transmission, the
-        sender is free immediately); zero-delay messages land in the
-        destination inbox directly. Control traffic (priority 0) rides a
-        dedicated per-link control lane — the virtual channel real
-        fabrics use — so a credit or CTS is never stuck behind an
-        in-service bulk chunk; payload messages serialize on the wire's
-        ``_wire_free`` schedule, non-preemptively, priority-ordered."""
+        """Hand a message to the network, via the fault injector when one
+        is attached: a dropped message vanishes here (the reliability
+        layer's retries are the only recovery), a duplicated one is
+        transmitted twice, and a delayed one (frozen rank / slow link)
+        parks on a per-link fault lane whose delivery is *observed* into
+        the interconnect model — injected slowness shows up in the same
+        EWMA latency telemetry real slowness would."""
+        fi = self.faults
+        if fi is not None:
+            drop, extra, dup = fi.intercept(msg)
+            if drop:
+                return
+            if dup:
+                self._transmit(msg)
+            if extra > 0:
+                self._deliver_delayed(msg, extra)
+                return
+        self._transmit(msg)
+
+    def _deliver_delayed(self, msg: Message, delay: float) -> None:
+        """Injected-fault delay: park the message on the per-link fault
+        lane, transmit after ``delay``, and observe the elapsed time as a
+        (latency-classed) topology sample — the straggler signal."""
+        with self._inflight_lock:
+            self._inflight += 1
+        t0 = time.perf_counter()
+        t_deliver = t0 + delay
+        link = (msg.src, msg.dst)
+
+        def run():
+            try:
+                self._sleep_until(t_deliver)
+                self._transmit(msg)
+                nbytes = msg.payload.nbytes if msg.payload is not None \
+                    else (len(msg.inline) if msg.inline is not None else 0)
+                # 0-byte control messages observe as 1 byte: a latency
+                # sample, exactly what a delayed heartbeat should be
+                self.topology.observe(msg.src, msg.dst, max(nbytes, 1),
+                                      time.perf_counter() - t0)
+            finally:
+                with self._inflight_lock:
+                    self._inflight -= 1
+
+        try:
+            self.net.submit("fault", link, run)
+        except RuntimeError:        # engine shut down: drop, roll back
+            with self._inflight_lock:
+                self._inflight -= 1
+
+    def _transmit(self, msg: Message):
+        """The fault-free network: when the simulated link has a nonzero
+        delay the message is queued on a link lane (cut-through — the
+        LINK serializes transmission, the sender is free immediately);
+        zero-delay messages land in the destination inbox directly.
+        Control traffic (priority 0) rides a dedicated per-link control
+        lane — the virtual channel real fabrics use — so a credit or CTS
+        is never stuck behind an in-service bulk chunk; payload messages
+        serialize on the wire's ``_wire_free`` schedule, non-preemptively,
+        priority-ordered."""
         nbytes = msg.payload.nbytes if msg.payload is not None else \
             (len(msg.inline) if msg.inline is not None else 0)
         delay = self.latency_s
@@ -1274,6 +1782,36 @@ class Cluster:
         with self._inflight_lock:
             return self._inflight > 0
 
+    def _barrier_diagnostics(self) -> str:
+        """What the cluster is stuck on: per-busy-rank queue depths, lane
+        backlogs, live rendezvous stream ids and unacked reliable sends,
+        plus the network's in-flight count and control-VC pressure —
+        attached to the barrier-timeout error so a hang names its
+        culprit instead of just timing out."""
+        with self._inflight_lock:
+            inflight = self._inflight
+        parts = [f"net: {inflight} msg(s) in flight on link lanes, "
+                 f"ctrl VC {self.ctrl_stats['msgs']} msgs "
+                 f"({self.ctrl_stats['queued_s'] * 1e3:.1f} ms queued)"]
+        dead = self.faults.dead if self.faults is not None else frozenset()
+        for r in self.ranks:
+            if r.rank in dead or not self._rank_busy(r):
+                continue
+            lanes = r.runtime.engine.backlogs()
+            with r._out_lock:
+                nout = len(r.outgoing)
+            with r._unacked_lock:
+                unacked = sorted(r._unacked)
+            parts.append(
+                f"rank {r.rank}: inbox={r.inbox.qsize()} "
+                f"active={r._active} outgoing={nout} "
+                f"lane_backlogs={lanes or '{}'} "
+                f"rdzv_out={sorted(r._rdzv_out)} "
+                f"rdzv_in={sorted(r._rdzv_in)} "
+                f"pending_meta={sorted(r._pending_meta)} "
+                f"unacked={unacked}")
+        return "; ".join(parts)
+
     def barrier(self, timeout: float = 60.0):
         """Wait until every rank's message work has drained — inboxes,
         pump activity, rendezvous state, net-send/net-recv lanes, and
@@ -1281,19 +1819,28 @@ class Cluster:
         runtimes. Requires TWO consecutive all-idle sweeps: every handoff
         (pump → lane → link → inbox) marks its next stage busy before the
         previous one goes idle, so anything in flight during sweep one is
-        visible somewhere by sweep two."""
+        visible somewhere by sweep two. Ranks the fault injector has
+        killed are skipped — they are partitioned, not draining."""
         deadline = time.time() + timeout
         idle_sweeps = 0
         while idle_sweeps < 2:
+            dead = self.faults.dead if self.faults is not None \
+                else frozenset()
             if self._net_busy() \
-                    or any(self._rank_busy(r) for r in self.ranks):
+                    or any(self._rank_busy(r) for r in self.ranks
+                           if r.rank not in dead):
                 idle_sweeps = 0
                 if time.time() > deadline:
-                    raise TimeoutError("cluster barrier timeout")
+                    raise TimeoutError(
+                        f"cluster barrier timeout after {timeout:.1f}s — "
+                        + self._barrier_diagnostics())
                 time.sleep(0.001)
             else:
                 idle_sweeps += 1
+        dead = self.faults.dead if self.faults is not None else frozenset()
         for r in self.ranks:
+            if r.rank in dead:
+                continue
             r.runtime.barrier(timeout=max(deadline - time.time(), 1.0))
             r.check()      # strict mode: surface swallowed handler errors
 

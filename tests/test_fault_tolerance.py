@@ -1,0 +1,366 @@
+"""End-to-end elastic fault tolerance: deterministic fault injection,
+retry/NACK recovery on the reliability layer, heartbeat-driven failure
+detection, live chunk migration, straggler drains, and the diagnostics
+attached to stuck-cluster errors."""
+import json
+import os
+import threading
+import time
+import types
+
+import numpy as np
+import pytest
+
+from repro.core import RuntimeConfig
+from repro.distributed import (Cluster, ElasticController, ElasticRuntime,
+                               FaultInjector, OwnerMap, handler)
+from repro.apps.jacobi3d import run_cluster_elastic, run_reference
+
+_got = {}
+_lock = threading.Lock()
+
+
+@handler(name="ft_recv")
+def _ft_recv(ctx, obj):
+    with _lock:
+        _got.setdefault(ctx.message.user["tag"], []).append(
+            None if obj is None else np.asarray(obj.get()))
+
+
+def _wait(pred, timeout=30.0):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        with _lock:
+            if pred():
+                return True
+        time.sleep(0.005)
+    return False
+
+
+@pytest.fixture(autouse=True)
+def _clear_got():
+    with _lock:
+        _got.clear()
+    yield
+
+
+def _cfg(**kw):
+    return RuntimeConfig(memory_capacity=1 << 26, **kw)
+
+
+# ---------------------------------------------------------------------------
+# fault injector
+# ---------------------------------------------------------------------------
+
+def test_fault_injector_deterministic_under_seed():
+    """Same seed + same message order → identical fault decisions."""
+    msgs = [types.SimpleNamespace(src=i % 2, dst=(i + 1) % 2)
+            for i in range(300)]
+
+    def decisions(seed):
+        fi = FaultInjector(None, seed=seed)
+        fi.set_link(0, 1, drop=0.3, dup=0.2)
+        fi.set_link(1, 0, drop=0.1)
+        return [fi.intercept(m) for m in msgs]
+
+    assert decisions(7) == decisions(7)
+    assert decisions(7) != decisions(8)
+
+
+def test_fault_injector_kill_and_freeze_semantics():
+    fi = FaultInjector(None, seed=0)
+    fi.kill_rank(1)
+    drop, delay, dup = fi.intercept(types.SimpleNamespace(src=0, dst=1))
+    assert drop and not dup
+    # both directions die: a killed rank is gone to the whole network
+    drop, _, _ = fi.intercept(types.SimpleNamespace(src=1, dst=0))
+    assert drop
+    fi.revive_rank(1)
+    drop, _, _ = fi.intercept(types.SimpleNamespace(src=0, dst=1))
+    assert not drop
+    fi.freeze_rank(1, 0.2)
+    assert fi.is_frozen(1)
+    _, delay, _ = fi.intercept(types.SimpleNamespace(src=0, dst=1))
+    assert 0.0 < delay <= 0.2
+    time.sleep(0.25)
+    assert not fi.is_frozen(1)          # freeze expires on its own
+    assert fi.stats["kills"] == 1 and fi.stats["freezes"] == 1
+
+
+# ---------------------------------------------------------------------------
+# reliability layer: drop → retransmit, never hang
+# ---------------------------------------------------------------------------
+
+def test_retry_recovers_fully_dropped_eager_send():
+    cfg = _cfg(retry_backoff_s=0.02, retry_tick_s=0.002)
+    with Cluster(2, cfg) as c:
+        fi = c.fault_injector(seed=3)
+        fi.set_link(0, 1, drop=1.0)     # black hole, briefly
+        obj = c.ranks[0].runtime.hetero_object(
+            np.arange(256, dtype=np.float32))
+        c.ranks[0].send(1, "ft_recv", obj, user={"tag": "eager"})
+        time.sleep(0.05)                # original + first retries eaten
+        assert "eager" not in _got
+        fi.clear_link(0, 1)
+        assert _wait(lambda: len(_got.get("eager", [])) == 1)
+        np.testing.assert_array_equal(
+            _got["eager"][0], np.arange(256, dtype=np.float32))
+        assert c.ranks[0].stats["retries"] >= 1
+        assert c.ranks[0].stats["send_failures"] == 0
+        assert fi.stats["dropped"] >= 1
+
+
+def test_nack_recovers_dropped_rendezvous_chunks():
+    """Chunks of a rendezvous stream dropped on the wire: the receiver's
+    NACK (+ the sender's tail resend) retransmit exactly the missing
+    sequence numbers; the payload still arrives bit-perfect."""
+    cfg = _cfg(chunk_bytes=32 << 10, retry_backoff_s=0.02,
+               retry_tick_s=0.002)
+    with Cluster(2, cfg) as c:
+        fi = c.fault_injector(seed=5)
+        fi.set_link(0, 1, drop=0.35)    # data direction only; acks clean
+        big = np.random.default_rng(0).random((128, 1024)).astype(
+            np.float32)                 # 512 KiB → 16 chunks
+        obj = c.ranks[0].runtime.hetero_object(big)
+        c.ranks[0].send(1, "ft_recv", obj, user={"tag": "rdzv"})
+        time.sleep(0.08)
+        fi.clear_link(0, 1)             # let the repair cycle finish clean
+        assert _wait(lambda: _got.get("rdzv"))
+        np.testing.assert_array_equal(_got["rdzv"][0], big)
+        assert fi.stats["dropped"] >= 1
+        assert c.ranks[1].stats["dup_dropped"] >= 0   # dedup kept it exact
+        c.barrier(timeout=60)
+        for r in c.ranks:
+            g = r.state_gauges()
+            assert all(v == 0 for v in g.values()), (r.rank, g)
+
+
+def test_remove_peer_races_inflight_out_of_order_stream():
+    """Sweeping a peer while its rendezvous stream is mid-flight (with
+    duplicated + delayed chunks arriving out of order afterwards) must
+    neither crash nor leak state, and the pair must work again after a
+    reset."""
+    cfg = _cfg(chunk_bytes=32 << 10)
+    with Cluster(2, cfg) as c:
+        fi = c.fault_injector(seed=1)
+        fi.set_link(0, 1, delay_s=0.05, dup=0.3)
+        big = np.random.default_rng(1).random((128, 1024)).astype(
+            np.float32)
+        obj = c.ranks[0].runtime.hetero_object(big)
+        c.ranks[0].send(1, "ft_recv", obj, user={"tag": "race"})
+        time.sleep(0.01)                # stream is now in flight
+        c.ranks[1].remove_peer(0)       # receiver gives up on the peer
+        c.ranks[0].remove_peer(1)
+        fi.clear_link(0, 1)
+        time.sleep(0.2)                 # late chunks land on swept state
+        c.ranks[0].reset_peer_state()
+        c.ranks[1].reset_peer_state()
+        small = c.ranks[0].runtime.hetero_object(np.ones(8, np.float32))
+        c.ranks[0].send(1, "ft_recv", small, user={"tag": "after"})
+        assert _wait(lambda: _got.get("after"))
+        c.barrier(timeout=60)
+        for r in c.ranks:
+            g = r.state_gauges()
+            assert all(v == 0 for v in g.values()), (r.rank, g)
+
+
+def test_barrier_timeout_names_the_culprit():
+    """A stuck cluster barrier must say WHAT it is stuck on — in-flight
+    network messages, lane backlogs, live stream ids — not just time
+    out."""
+    cfg = _cfg(chunk_bytes=32 << 10)
+    with Cluster(2, cfg) as c:
+        fi = c.fault_injector(seed=0)
+        fi.set_link(0, 1, delay_s=0.5)
+        big = np.random.default_rng(2).random((128, 1024)).astype(
+            np.float32)
+        obj = c.ranks[0].runtime.hetero_object(big)
+        c.ranks[0].send(1, "ft_recv", obj, user={"tag": "diag"})
+        time.sleep(0.02)
+        with pytest.raises(TimeoutError) as ei:
+            c.barrier(timeout=0.25)
+        msg = str(ei.value)
+        assert "cluster barrier timeout" in msg
+        assert "in flight" in msg and "ctrl VC" in msg
+        fi.clear_link(0, 1)
+        assert _wait(lambda: _got.get("diag"))   # then it drains fine
+        np.testing.assert_array_equal(_got["diag"][0], big)
+
+
+# ---------------------------------------------------------------------------
+# controller: injectable clock + plans against a live owner map
+# ---------------------------------------------------------------------------
+
+def test_elastic_controller_runs_on_injected_clock():
+    """Regression for the wall-clock dependency: detection must follow
+    the injected monotonic clock only — a fake clock drives the whole
+    timeout logic with zero real sleeping."""
+    t = [100.0]
+    ctrl = ElasticController([0, 1, 2], heartbeat_timeout=5.0,
+                             clock=lambda: t[0])
+    assert ctrl.detect_failures() == []
+    t[0] += 4.9
+    ctrl.heartbeat(1)                   # stamped at fake-now
+    assert ctrl.detect_failures() == [] # nobody past 5.0 yet
+    t[0] += 4.9                         # workers 0,2 now 9.8 stale
+    assert sorted(ctrl.detect_failures()) == [0, 2]
+    assert ctrl.alive_workers() == [1]
+    ctrl.heartbeat(0)                   # a late heartbeat revives
+    assert sorted(ctrl.alive_workers()) == [0, 1]
+    # explicit timestamps (receiver-side arrival times) also work
+    ctrl.heartbeat(1, now=t[0] - 5.1)
+    assert ctrl.detect_failures() == [1]
+
+
+def test_plans_execute_against_live_owner_map():
+    ctrl = ElasticController([0, 1, 2, 3], heartbeat_timeout=10.0)
+    owner = OwnerMap()
+    for oid in range(8):
+        owner.assign(oid, oid % 4)
+    ctrl.health[3].alive = False
+    plan = ctrl.shrink_plan(owner, [3])
+    assert {oid for oid, _, _ in plan} == {3, 7}
+    assert all(old == 3 for _, old, _ in plan)
+    for oid, rank in owner.items():     # nothing points at the dead rank
+        assert rank != 3
+    for oid, _, new in plan:            # the map reflects the plan
+        assert owner.owner(oid) == new
+
+    plan = ctrl.grow_plan(owner, [3])
+    assert plan, "rebalance must move chunks onto the (re)joined rank"
+    assert all(dst == 3 for _, _, dst in plan)
+    for oid, _, dst in plan:
+        assert owner.owner(oid) == dst
+
+    ctrl.heartbeat(1, slowdown=8.0)     # rank 1 is now an 8x straggler
+    plan = ctrl.straggler_plan(owner)
+    assert plan
+    assert all(src == 1 for _, src, _ in plan)
+    for oid, _, dst in plan:
+        assert dst != 1 and owner.owner(oid) == dst
+
+
+# ---------------------------------------------------------------------------
+# the full loop: heartbeats → detection → migration → resume
+# ---------------------------------------------------------------------------
+
+def test_heartbeat_detection_restores_chunks_end_to_end():
+    """Kill a rank on the wire; the next polls must detect it through
+    missed heartbeats, sweep it from the survivors, replay the owner
+    map, and restore its chunks (restore_fn) onto the survivors."""
+    with Cluster(3, _cfg()) as c:
+        fi = c.fault_injector(seed=0)
+        owner = OwnerMap()
+        data = {}
+        for oid in range(6):
+            owner.assign(oid, oid % 3)
+            arr = np.full((32,), float(oid), np.float32)
+            data[oid] = arr
+            r = c.ranks[oid % 3]
+            r.register_object(("chunk", oid), r.runtime.hetero_object(arr))
+        er = ElasticRuntime(c, owner, key_fn=lambda o: ("chunk", o),
+                            restore_fn=lambda o: data[o],
+                            heartbeat_interval_s=0.02,
+                            heartbeat_timeout_s=0.15)
+        try:
+            fi.kill_rank(2)
+            dead, deadline = [], time.time() + 20
+            while not dead and time.time() < deadline:
+                time.sleep(0.03)
+                dead = er.poll()["dead"]        # manual, deterministic
+            assert dead == [2]
+            for oid in (2, 5):                  # rank 2's chunks
+                new = owner.owner(oid)
+                assert new != 2
+                robj = c.ranks[new].objects[("chunk", oid)]
+                np.testing.assert_array_equal(np.asarray(robj.get()),
+                                              data[oid])
+            assert er.stats["recoveries"] == 1
+            assert er.stats["bytes_migrated"] > 0
+            assert er.epoch == 1
+            assert c.ranks[0].stats["recovery_stall_s"] > 0
+            assert c.ranks[0].stats["heartbeats_missed"] >= 1
+        finally:
+            er.close()
+
+
+def test_jacobi_elastic_kill_revive_bit_exact():
+    """The ELASTIC-Recover scenario in miniature (seeded, tier-1): a
+    distributed Jacobi run loses a rank after iteration 1's checkpoint
+    commits and regains it two iterations later — no restart, and the
+    result is bit-identical to the unfaulted elastic run."""
+    rng = np.random.default_rng(42)
+    u0 = rng.standard_normal((24, 16, 16)).astype(np.float32)
+    iters = 4
+    with Cluster(3, _cfg()) as c:
+        base, rep0 = run_cluster_elastic(u0, iters, c)
+    assert rep0["epochs"] == 0          # no fault → no world change
+    ref = run_reference(u0, iters)
+    np.testing.assert_allclose(base, ref, rtol=1e-5, atol=1e-6)
+
+    with Cluster(3, _cfg()) as c:
+        out, rep = run_cluster_elastic(
+            u0, iters, c, ckpt_dir=str(_tmp_ckpt_dir()),
+            kill=(2, 1), revive_at=(2, 2),
+            heartbeat_interval_s=0.02, heartbeat_timeout_s=0.4)
+    assert np.array_equal(out, base), "faulted run must be bit-exact"
+    e = rep["elastic"]
+    assert e["recoveries"] == 1 and e["dead"] == [2]
+    assert e["grows"] >= 1              # the revived rank was folded back
+    assert e["bytes_migrated"] > 0
+    assert rep["monitor_stats"]["recovery_stall_s"] > 0
+    assert rep["faults"]["kills"] == 1
+
+
+def _tmp_ckpt_dir():
+    import tempfile
+    d = tempfile.mkdtemp(prefix="ft_ckpt_")
+    return d
+
+
+def test_jacobi_straggler_chunks_drain_off_frozen_rank():
+    """Freeze one rank's network while it keeps computing: the monitor's
+    slowdown fusion must flag it (never declare it dead) and live-migrate
+    chunks off it; the run completes and matches the oracle."""
+    rng = np.random.default_rng(7)
+    u0 = rng.standard_normal((24, 16, 16)).astype(np.float32)
+    iters = 3
+    with Cluster(3, _cfg()) as c:
+        out, rep = run_cluster_elastic(
+            u0, iters, c, slabs=6, freeze=(1, 1, 0.6),
+            heartbeat_interval_s=0.02, heartbeat_timeout_s=3.0,
+            straggler_factor=25.0)
+    ref = run_reference(u0, iters)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-6)
+    e = rep["elastic"]
+    assert e["drains"] >= 1
+    assert 1 in e["stragglers"]
+    assert e["dead"] == []              # frozen ≠ dead
+    assert e["chunks_migrated"] >= 1
+    sig = e["straggler_signals"][1]
+    assert sig["gap_ratio"] >= 25.0     # the heartbeat gap drove it
+
+
+# ---------------------------------------------------------------------------
+# checked-in benchmark rung stays well-formed
+# ---------------------------------------------------------------------------
+
+def test_elastic_recover_rung_json_wellformed():
+    path = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "benchmarks", "results", "dryrun",
+                        "rt_ladder__ELASTIC-Recover__dev2.json")
+    if not os.path.exists(path):
+        pytest.skip("ELASTIC-Recover rung JSON not generated")
+    with open(path) as f:
+        row = json.load(f)
+    assert "error" not in row, row
+    need = {"n", "iters", "ranks", "ctrl_billed", "oracle_ok",
+            "fail_recover", "straggler"}
+    assert not (need - set(row)), row
+    fr = row["fail_recover"]
+    assert fr["recoveries"] >= 1 and fr["bitwise_identical"] is True, fr
+    assert fr["bytes_migrated"] > 0, fr
+    assert 0 < fr["recovery_stall_s"] < fr["wall_s"], fr
+    st = row["straggler"]
+    assert st["drains"] >= 1 and st["dead_detected"] == [], st
+    assert st["chunks_migrated"] >= 1 and st["oracle_ok"] is True, st
