@@ -15,6 +15,9 @@ Ladder (paper §4.1 + transfer engine):
   TF-Prefetch    + argument prefetch pipeline (transfers overlap compute)
   TF-D2D         + direct device→device transfers (no host bounce)
   SCHED-Locality + data-gravity placement (residency-ledger cost model)
+  TASK-Replay    + compiled task-graph fast path (trace recurring windows,
+                   fuse same-device runs, replay without per-task
+                   scheduling) and the shared-lane-pool wake A/B
 
 The SCHED-Locality rung is measured on a chunk-update workload (rw task
 chains over persistent chunks, the over-decomposition pattern) under both
@@ -70,7 +73,7 @@ LADDER_BY_NAME = dict(LADDER)
 
 # rungs with their own workload/measurement, appended after the ladder
 EXTRA_RUNGS = ["SCHED-Locality", "MSG-Pipeline", "MSG-HOL",
-               "MSG-Congestion", "ELASTIC-Recover"]
+               "MSG-Congestion", "ELASTIC-Recover", "TASK-Replay"]
 
 # subset of Runtime.stats() recorded per rung in the JSON report
 _REPORT_KEYS = ("staging_hits", "staging_misses", "request_pool_hits",
@@ -178,6 +181,102 @@ def bench_elastic_recover(iters: int = 6) -> Dict:
     the unfaulted elastic run bit-for-bit — no restart, bounded stall."""
     import elastic_recover   # benchmarks/ is on sys.path as a script
     return elastic_recover.run_recover(iters=max(iters, 4))
+
+
+# power-of-two scales: replay fuses both kernels under ONE jit, and XLA
+# may contract mul+add chains into FMAs — exact multiplies keep the
+# contracted result bit-identical to the interpreted two-dispatch run
+def replay_f(x, y):
+    return (x * 0.5).astype(x.dtype)
+
+
+def replay_g(y, x):
+    return ((x + y) * 0.5).astype(x.dtype)
+
+
+def _replay_arm(trace: bool, objects: int, steps: int,
+                warmup: int) -> tuple:
+    """One arm of the TASK-Replay A/B: ``2 * objects`` small tasks per
+    step (producer + in-place consumer per object pair), windows
+    delimited by ``step_boundary``. Returns (tasks/s, final arrays,
+    runtime stats)."""
+    cfg = RuntimeConfig(memory_capacity=1 << 30, trace_graphs=trace,
+                        replay_after=3)
+    with Runtime(cfg) as rt:
+        xs = [rt.hetero_object(np.full((64, 64), 1.0 + 0.01 * i,
+                                       np.float32))
+              for i in range(objects)]
+        ys = [rt.hetero_object(np.zeros((64, 64), np.float32))
+              for _ in range(objects)]
+
+        def step():
+            for x, y in zip(xs, ys):
+                rt.run(replay_f, [(x, "r"), (y, "w")])
+                rt.run(replay_g, [(y, "r"), (x, "rw")])
+            rt.step_boundary()
+
+        for _ in range(warmup):      # compile + first replay
+            step()
+        rt.barrier(timeout=600)
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            step()
+        rt.barrier(timeout=600)
+        dt = time.perf_counter() - t0
+        finals = [np.asarray(o.get()).copy() for o in xs + ys]
+        st = rt.stats()
+    return 2 * objects * steps / dt, finals, st
+
+
+def _wake_latency_p50_us(pool_workers: int, samples: int = 200) -> float:
+    """submit→job-start latency p50 for one lane, pooled vs legacy."""
+    from repro.core.futures import HFuture
+    from repro.core.progress import ProgressEngine
+    eng = ProgressEngine(name="bench", pool_workers=pool_workers)
+    lats = []
+    try:
+        lane = eng.lane("transfer", 0)
+        for _ in range(20):          # warm the worker / thread
+            lane.submit(lambda: None, HFuture()).get(timeout=30)
+        for _ in range(samples):
+            t0 = time.perf_counter()
+            started = lane.submit(time.perf_counter, HFuture()).get(
+                timeout=30)
+            lats.append(started - t0)
+    finally:
+        eng.shutdown()
+    lats.sort()
+    return lats[len(lats) // 2] * 1e6
+
+
+def bench_task_replay(objects: int = 8, steps: int = 60) -> Dict:
+    """TASK-Replay rung (ROADMAP 4): tasks/s for a recurring 2·objects-task
+    window, interpreted vs compiled-replay, bitwise-compared; plus the
+    shared-lane-pool wake-latency A/B (pool_workers=4 vs legacy
+    thread-per-lane)."""
+    warmup = 4                      # replay_after=3 compiles on window 3
+    interp_tps, interp_finals, _ = _replay_arm(False, objects, steps,
+                                               warmup)
+    replay_tps, replay_finals, st = _replay_arm(True, objects, steps,
+                                                warmup)
+    bitwise = all(np.array_equal(a, b)
+                  for a, b in zip(interp_finals, replay_finals))
+    return {
+        "objects": objects,
+        "steps": steps,
+        "tasks_per_step": 2 * objects,
+        "interpreted_tasks_per_s": round(interp_tps, 1),
+        "replay_tasks_per_s": round(replay_tps, 1),
+        "speedup": round(replay_tps / interp_tps, 3),
+        "graphs_traced": st["graphs_traced"],
+        "replays": st["graph_replays"],
+        "replayed_tasks": st["replayed_tasks"],
+        "graph_invalidations": st["graph_invalidations"],
+        "bitwise_identical": bool(bitwise),
+        "pool_workers": RuntimeConfig().pool_workers,
+        "wake_pool_p50_us": round(_wake_latency_p50_us(4), 1),
+        "wake_thread_p50_us": round(_wake_latency_p50_us(0), 1),
+    }
 
 
 def bench_config(name: str, overrides: Dict, n: int, iters: int,
@@ -311,6 +410,23 @@ def main(argv=None):
         print(f"figELA_ELASTIC-Recover_summary,,"
               f"recoveries{fr['recoveries']}_grows{fr['grows']}_"
               f"oracle{int(row['oracle_ok'])}")
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(row, f, indent=2)
+        return
+    if args.only == "TASK-Replay":
+        row = bench_task_replay(steps=max(args.iters, 30))
+        print(f"figTG_TASK-Replay_interpreted,"
+              f"{1e6 / row['interpreted_tasks_per_s']:.1f},")
+        print(f"figTG_TASK-Replay_replay,"
+              f"{1e6 / row['replay_tasks_per_s']:.1f},"
+              f"x{row['speedup']:.3f}_replays{row['replays']}")
+        print(f"figTG_TASK-Replay_wake,,"
+              f"pool{row['wake_pool_p50_us']:.1f}us_"
+              f"thread{row['wake_thread_p50_us']:.1f}us")
+        print(f"figTG_TASK-Replay_summary,,"
+              f"bitwise{int(row['bitwise_identical'])}_"
+              f"tasks{row['replayed_tasks']}")
         if args.json:
             with open(args.json, "w") as f:
                 json.dump(row, f, indent=2)

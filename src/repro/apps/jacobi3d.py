@@ -146,6 +146,11 @@ def run_tasked(u0: np.ndarray, iters: int, runtime: Runtime,
             for tag in ("lo0", "hi0", "lo1", "hi1", "lo2", "hi2"):
                 args.append((faces[(c.cid, tag)], "r"))
             runtime.run(update_kernel, args, name=f"update{c.cid}")
+        # iteration edge: the task-graph tracer keys recurrence detection
+        # on this (no-op unless cfg.trace_graphs is set) — after
+        # replay_after identical sweeps the whole iteration replays as
+        # fused per-chain dispatches
+        runtime.step_boundary()
     runtime.barrier(timeout=600)
 
     out = np.empty_like(u0)

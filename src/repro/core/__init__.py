@@ -13,6 +13,7 @@ from repro.core.residency import (PLACEMENTS, DataGravityPolicy,  # noqa: F401
                                   ResidencyLedger)
 from repro.core.progress import Lane, ProgressEngine  # noqa: F401
 from repro.core.runtime import Runtime, RuntimeConfig  # noqa: F401
+from repro.core.taskgraph import GraphTracer, TracedGraph  # noqa: F401
 from repro.core.topology import (InterconnectModel,  # noqa: F401
                                  LinkEstimate, probe_runtime_links)
 from repro.core.scheduler import (SCHEDULERS, FifoScheduler,  # noqa: F401

@@ -88,6 +88,7 @@ from repro.core.memory import RequestPool, StagingPool
 from repro.core.progress import ProgressEngine
 from repro.core.residency import PLACEMENTS, ResidencyLedger
 from repro.core.scheduler import SCHEDULERS, Scheduler
+from repro.core.taskgraph import GraphTracer
 from repro.core.topology import (InterconnectModel, probe_link,
                                  probe_runtime_links)
 
@@ -158,6 +159,18 @@ class RuntimeConfig:
     rdzv_finish_timeout_s: float = 120.0
     peer_sweep_timeout_s: float = 10.0
     pump_join_timeout_s: float = 5.0
+    # -- compiled task-graph fast path (core/taskgraph.py) --
+    # trace recurring submit windows (delimited by step_boundary()/
+    # barrier()) and, once the same DAG recurred replay_after times,
+    # replay it as fused per-chain dispatches that bypass per-task
+    # scheduling. Opt-in: interior futures of replayed windows resolve
+    # with None instead of a device handle.
+    trace_graphs: bool = False
+    replay_after: int = 3
+    # shared progress-engine worker pool width (base threads servicing
+    # ALL lanes; overflow workers spawn transiently when every base
+    # worker is parked in a blocking job). 0 = legacy thread-per-lane.
+    pool_workers: int = 4
 
 
 class Runtime:
@@ -194,7 +207,9 @@ class Runtime:
         self._stats = {"tasks": 0, "transfers_h2d": 0, "transfers_d2h": 0,
                        "transfers_d2d": 0, "bytes_h2d": 0, "bytes_d2h": 0,
                        "bytes_d2d": 0, "prefetch_hits": 0,
-                       "prefetch_misses": 0, "prefetch_stalls": 0}
+                       "prefetch_misses": 0, "prefetch_stalls": 0,
+                       "graphs_traced": 0, "graph_replays": 0,
+                       "graph_invalidations": 0, "replayed_tasks": 0}
         self._threads: List[threading.Thread] = []
         # unified progress engine (core/progress.py): one reactor owns
         # every asynchronous context this runtime needs — per-device
@@ -204,7 +219,13 @@ class Runtime:
         # polling loop), and — when a distributed Rank wraps this runtime
         # — its net-send / net-recv lanes
         self.engine = ProgressEngine(name="rt",
-                                     strict=self.cfg.strict_errors)
+                                     strict=self.cfg.strict_errors,
+                                     pool_workers=self.cfg.pool_workers)
+        # compiled task-graph fast path (core/taskgraph.py): opt-in
+        # tracer that turns recurring submit windows into fused replays
+        self._tracer: Optional[GraphTracer] = (
+            GraphTracer(self, self.cfg.replay_after)
+            if self.cfg.trace_graphs else None)
         self._start_workers()
 
     # ------------------------------------------------------------------
@@ -236,6 +257,8 @@ class Runtime:
         §4.2.4): once conflicting writers retire, every existing copy is
         invalidated and the new device array becomes the only valid one.
         No host staging on either side."""
+        if self._tracer is not None:
+            self._tracer.flush()   # parked writes must be observable
         with self._lock:
             lw = obj.last_writer
         if lw is not None and not lw.done():
@@ -270,23 +293,61 @@ class Runtime:
     def submit(self, task: HeteroTask, kernel: Callable) -> HFuture:
         """Enqueue an execution request; returns the task's future."""
         task.kernel = kernel
+        tracer = self._tracer
+        if tracer is not None:
+            with self._lock:
+                task.state = TaskState.SUBMITTED
+                self._tasks_pending += 1
+                self._stats["tasks"] += 1
+            # the tracer either parks the task for a compiled replay
+            # (skipping pins / dependency inference / scheduling) or
+            # tells us to run it interpreted while it records the window
+            if not tracer.on_submit(task, kernel):
+                self._enqueue(task)
+            return task.future
         with self._lock:
             task.state = TaskState.SUBMITTED
             self._tasks_pending += 1
             self._stats["tasks"] += 1
-            # ledger-owned pins: every argument is protected from
-            # eviction for the task's whole submitted→finished window
-            # (the busy() object-lock walk the eviction path used to do)
-            for obj in {id(r.obj): r.obj for r in task.args}.values():
-                self.residency.pin(obj)
-            n = dep.infer_dependencies(task)
-            if n > 0:
-                task.state = TaskState.BLOCKED
-            else:
-                task.state = TaskState.READY
-                self.scheduler.push(task)
-            self._work.notify_all()
+            self._pin_and_schedule_locked(task)
         return task.future
+
+    def _pin_and_schedule_locked(self, task: HeteroTask) -> None:
+        # ledger-owned pins: every argument is protected from
+        # eviction for the task's whole submitted→finished window
+        # (the busy() object-lock walk the eviction path used to do)
+        for obj in {id(r.obj): r.obj for r in task.args}.values():
+            self.residency.pin(obj)
+        n = dep.infer_dependencies(task)
+        if n > 0:
+            task.state = TaskState.BLOCKED
+        else:
+            task.state = TaskState.READY
+            self.scheduler.push(task)
+        self._work.notify_all()
+
+    def _enqueue(self, task: HeteroTask) -> None:
+        """Interpreted-path scheduling for an already-accounted task
+        (normal submits under tracing, and parked tasks the tracer
+        flushes back when a window deviates from its compiled graph)."""
+        with self._lock:
+            self._pin_and_schedule_locked(task)
+
+    def step_boundary(self) -> None:
+        """Declare the edge between two application steps — the window
+        delimiter the task-graph tracer keys recurrence detection on
+        (Jacobi iterations, serve steps, microbatch train steps). A
+        no-op unless ``trace_graphs`` is enabled; ``barrier()`` is also
+        a boundary, so drivers that barrier every step need no change."""
+        if self._tracer is not None:
+            self._tracer.on_boundary()
+
+    def invalidate_traces(self) -> None:
+        """Drop any compiled task graph and restart recurrence detection
+        (called on ElasticRuntime epoch bumps: placements captured under
+        the old epoch may name devices that rescaled away)."""
+        if self._tracer is not None:
+            self._tracer.invalidate()
 
     def run(self, kernel: Callable, args: Sequence[Tuple[HeteroObject, str]],
             device_type: Optional[str] = None, name: str = "") -> HeteroTask:
@@ -302,6 +363,11 @@ class Runtime:
 
     def barrier(self, timeout: Optional[float] = 120.0) -> None:
         """Wait until every submitted task has retired."""
+        if self._tracer is not None:
+            # a barrier is a window boundary: replay a fully-matched
+            # window (synchronously, so the wait below sees it retired)
+            # or advance recurrence detection
+            self._tracer.on_boundary()
         deadline = None if timeout is None else time.time() + timeout
         with self._lock:
             while self._tasks_pending > 0:
@@ -344,6 +410,10 @@ class Runtime:
     # host access protocol
     # ------------------------------------------------------------------
     def _request_host(self, obj: HeteroObject, write: bool) -> HFuture:
+        if self._tracer is not None:
+            # a mid-window host access must observe parked writes: the
+            # tracer flushes parked tasks through the interpreted path
+            self._tracer.flush()
         self.residency.pin(obj)      # until _release_host
         fut = self.futures.acquire()
 
@@ -384,6 +454,8 @@ class Runtime:
         step snapshots a private on-device ``clone`` of the copy, then
         drops the pin — the clone is referenced by nothing else, so no
         later donation can delete the payload mid-flight."""
+        if self._tracer is not None:
+            self._tracer.flush()   # parked writes must be observable
         with obj.lock:
             obj.device_pins += 1
         self.residency.pin(obj)      # until _release_device_view

@@ -352,6 +352,16 @@ class ElasticRuntime:
             return events
 
     # -- world changes -------------------------------------------------
+    def _bump_epoch(self) -> None:
+        """Commit a world change: bump the epoch AND drop every rank's
+        compiled task graph — replay plans captured placements and
+        residency under the old world, and a migrated/restored chunk
+        invalidates both (drivers' epoch-redo loops re-trace on the new
+        topology)."""
+        self.epoch += 1
+        for r in self.cluster.ranks:
+            r.runtime.invalidate_traces()
+
     def _alive_ranks(self, exclude: Sequence[int] = ()) -> List[Any]:
         alive = set(self.controller.alive_workers()) - set(exclude)
         return [r for r in self.cluster.ranks if r.rank in alive]
@@ -407,7 +417,7 @@ class ElasticRuntime:
             self.stats["recoveries"] += 1
             self.stats["recovery_stall_s"] += stall
             self.stats["dead"].extend(int(d) for d in dead)
-            self.epoch += 1
+            self._bump_epoch()
             return plan
 
     def drain(self, straggler: int,
@@ -446,7 +456,7 @@ class ElasticRuntime:
             if plan:
                 self.stats["drains"] += 1
                 self.stats["chunks_migrated"] += len(plan)
-                self.epoch += 1
+                self._bump_epoch()
             return plan
 
     def grow(self, new_workers: Sequence[int]
@@ -481,7 +491,7 @@ class ElasticRuntime:
             if plan:
                 self.stats["grows"] += 1
                 self.stats["chunks_migrated"] += len(plan)
-                self.epoch += 1
+                self._bump_epoch()
             return plan
 
     def report(self) -> Dict[str, Any]:

@@ -255,6 +255,9 @@ class Rank:
         self.routes: Dict[str, int] = {}
         self.stats = {"sent": 0, "received": 0, "bytes_out": 0,
                       "bytes_d2d": 0, "bytes_staged": 0,
+                      # small host-path payloads upgraded to DIRECT
+                      # because a device replica existed (ROADMAP 5a)
+                      "direct_upgrades": 0,
                       "eager": 0, "rendezvous": 0,
                       "chunks_out": 0, "chunks_in": 0, "overlap_bytes": 0,
                       "credits_in": 0, "max_window": 0,
@@ -286,6 +289,17 @@ class Rank:
     # ------------------------------------------------------------------
     # public API (paper: mp_send with hetero_object argument)
     # ------------------------------------------------------------------
+    def _device_resident_small(self, obj: HeteroObject) -> bool:
+        """ROADMAP 5a upgrade predicate: the payload is small enough for
+        the eager path AND a device replica exists — or is about to, via
+        a pending writer whose output lands on a device (``last_writer``
+        is cleared on task completion, so non-None means in flight)."""
+        if obj.nbytes > self.runtime.cfg.eager_threshold:
+            return False
+        if self.runtime.residency.devices_of(obj):
+            return True
+        return obj.last_writer is not None
+
     def send(self, dst: int, handler_name: str, obj: Optional[HeteroObject]
              = None, user: Optional[Dict[str, Any]] = None,
              path: str = "host",
@@ -309,6 +323,13 @@ class Rank:
             return fut
         meta.payload_shape = tuple(obj.shape)
         meta.payload_dtype = np.dtype(obj.dtype).str
+        # ROADMAP 5a: small payloads with a live (or pending) device replica
+        # skip the host bounce — upgrade to the DIRECT device-view path.
+        # Stale residency is harmless: a HOST-only view at flush time
+        # degrades the message back to host staging.
+        if path == "host" and self._device_resident_small(obj):
+            path = meta.path = "direct"
+            self.stats["direct_upgrades"] += 1
         # (1) async access request; payload follows when ready. DIRECT sends
         # take a device view (no host staging, §3.2.3 Fig. 7); host-staged
         # sends pin a host copy as before (Fig. 6).
@@ -344,6 +365,9 @@ class Rank:
         b) — the stream completes into the target object instead of a
         handler allocation."""
         fut = HFuture()
+        if path == "host" and self._device_resident_small(data):
+            path = "direct"          # ROADMAP 5a, same upgrade as send()
+            self.stats["direct_upgrades"] += 1
         if path == "direct":
             access = self.runtime._request_device_view(data)
         else:
@@ -1530,7 +1554,12 @@ class Cluster:
     is billed real simulated time, instead of the old model where
     control chatter cost nothing and naive per-chunk crediting looked
     free. ``ctrl_stats`` counts control messages and their accumulated
-    queueing; ``ctrl_drain_per_s=0`` restores the unbilled channel.
+    queueing. The drain rate is DERIVED by default
+    (``ctrl_drain_per_s=None``): an EWMA over the measured
+    ``dispatch_control`` service time, seeded at 200k msgs/s and clamped
+    to [20k, 5M] — the same measure-then-derive pattern chunk sizing
+    uses with link bandwidth. Passing an explicit value pins the rate,
+    and ``ctrl_drain_per_s=0`` restores the unbilled channel.
 
     ``topology`` is the rank-pair ``InterconnectModel``: every
     payload-carrying delivery is timed into it, and the rendezvous
@@ -1539,12 +1568,29 @@ class Cluster:
 
     _CONTROL_KINDS = frozenset({"cts", "ack", "credit", "get", "nack"})
 
+    # adaptive control-drain seed and clamps (messages/second): the seed
+    # matches the old constant; the clamps keep one outlier service
+    # sample from pricing the channel absurdly in either direction
+    CTRL_DRAIN_SEED = 200e3
+    CTRL_DRAIN_MIN = 20e3
+    CTRL_DRAIN_MAX = 5e6
+    _CTRL_EWMA_ALPHA = 0.25
+
     def __init__(self, n_ranks: int, rt_config: Optional[RuntimeConfig] = None,
                  latency_s: float = 0.0, bw_bytes_per_s: float = 0.0,
-                 ctrl_drain_per_s: float = 200e3):
+                 ctrl_drain_per_s: Optional[float] = None):
         self.latency_s = latency_s
         self.bw = bw_bytes_per_s
-        self.ctrl_drain = ctrl_drain_per_s
+        # control-VC drain rate (ROADMAP 5d): ``None`` derives it from the
+        # measured control-message service time — an EWMA over what each
+        # ``dispatch_control`` actually costs, the same
+        # measure-then-derive pattern chunk sizing uses with bandwidth —
+        # seeded at the old 200k/s constant. An explicit value pins the
+        # rate (benchmarks/tests); 0 restores the unbilled channel.
+        self._ctrl_adaptive = ctrl_drain_per_s is None
+        self._ctrl_pinned = (0.0 if ctrl_drain_per_s is None
+                             else float(ctrl_drain_per_s))
+        self._ctrl_service_ewma = 1.0 / self.CTRL_DRAIN_SEED
         self.topology = InterconnectModel()
         self.net = ProgressEngine(name="net")
         self._inflight = 0             # messages on a link lane right now
@@ -1559,12 +1605,39 @@ class Cluster:
         # ANY delivering thread at reservation time, hence its own lock
         self._ctrl_free: Dict[Tuple[int, int], float] = {}
         self._ctrl_lock = threading.Lock()
-        self.ctrl_stats = {"msgs": 0, "queued_s": 0.0}
+        self.ctrl_stats = {"msgs": 0, "queued_s": 0.0,
+                           "adaptive": self._ctrl_adaptive,
+                           "drain_per_s": (self.CTRL_DRAIN_SEED
+                                           if self._ctrl_adaptive
+                                           else self._ctrl_pinned),
+                           "service_ewma_s": self._ctrl_service_ewma}
         # fault injection (None = perfect network, zero overhead on the
         # delivery path beyond one attribute check)
         self.faults: Optional[FaultInjector] = None
         self._elastic = None       # bound by ElasticRuntime
         self.ranks = [Rank(self, r, rt_config) for r in range(n_ranks)]
+
+    @property
+    def ctrl_drain(self) -> float:
+        """Current control-VC drain rate (messages/second). Pinned mode
+        returns the constructor value verbatim; adaptive mode inverts the
+        measured per-message service-time EWMA, clamped to
+        [CTRL_DRAIN_MIN, CTRL_DRAIN_MAX]."""
+        if not self._ctrl_adaptive:
+            return self._ctrl_pinned
+        rate = 1.0 / max(self._ctrl_service_ewma, 1e-9)
+        return min(max(rate, self.CTRL_DRAIN_MIN), self.CTRL_DRAIN_MAX)
+
+    def _observe_ctrl_service(self, dt: float) -> None:
+        """Fold one measured control-dispatch service time into the EWMA
+        the adaptive drain rate derives from."""
+        if not self._ctrl_adaptive or dt <= 0:
+            return
+        with self._ctrl_lock:
+            self._ctrl_service_ewma += self._CTRL_EWMA_ALPHA * (
+                dt - self._ctrl_service_ewma)
+            self.ctrl_stats["service_ewma_s"] = self._ctrl_service_ewma
+            self.ctrl_stats["drain_per_s"] = self.ctrl_drain
 
     def fault_injector(self, seed: int = 0) -> "FaultInjector":
         """Attach deterministic fault injection and engage the
@@ -1700,8 +1773,10 @@ class Cluster:
             ctl = self.net.peek("linkctl", link)
             if t_deliver - t0 <= 100e-6 and (ctl is None or not ctl.busy()):
                 self._sleep_until(t_deliver)
+                ts = time.perf_counter()
                 if not dst.dispatch_control(msg):
                     dst.enqueue(msg, prio)
+                self._observe_ctrl_service(time.perf_counter() - ts)
                 return
             with self._inflight_lock:
                 self._inflight += 1
@@ -1709,8 +1784,10 @@ class Cluster:
             def transmit_ctrl():
                 try:
                     self._sleep_until(t_deliver)
+                    ts = time.perf_counter()
                     if not dst.dispatch_control(msg):
                         dst.enqueue(msg, prio)
+                    self._observe_ctrl_service(time.perf_counter() - ts)
                 finally:
                     with self._inflight_lock:
                         self._inflight -= 1

@@ -3,6 +3,14 @@
 ``decode_step`` is the unit lowered for the ``decode_*`` / ``long_*`` dry-run
 cells: one new token per request against a KV cache of the cell's seq_len.
 Sampling is greedy (argmax) — the engine layer adds temperature sampling.
+
+``tasked_decode_loop`` drives the same decode step through the task
+runtime instead of calling it directly: every step is one hetero_task
+over the flattened (params, cache, tokens, lengths) state, delimited by
+``Runtime.step_boundary()`` — exactly the recurring one-task window the
+task-graph tracer compiles, so with ``RuntimeConfig.trace_graphs`` a
+steady-state decode loop replays as a single fused dispatch per step
+with zero per-task scheduling overhead.
 """
 from __future__ import annotations
 
@@ -11,6 +19,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.model_zoo import Model
 
@@ -38,6 +47,54 @@ def make_decode_step(model: Model):
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return next_tok, new_cache
     return decode_step
+
+
+def tasked_decode_loop(runtime, model: Model, params, cache,
+                       tokens, lengths, n_steps: int,
+                       device_type: Optional[str] = None,
+                       timeout: float = 120.0):
+    """Run ``n_steps`` of greedy single-token decode as hetero_tasks.
+
+    The model state is flattened into hetero_objects (params read-only,
+    cache/tokens/lengths read-write) and each step submits ONE task whose
+    kernel reassembles the pytrees, applies ``make_decode_step(model)``,
+    and returns the new state leaves. ``step_boundary()`` after every
+    submit marks the recurring window for the task-graph tracer.
+
+    Everything stays on device for the whole loop — reading tokens from
+    the host mid-loop would flush the traced window (by design: host
+    reads must observe parked writes). Returns ``(tokens_obj,
+    lengths_obj, cache_objs, cache_treedef)``; read final state with
+    ``.get()`` after the loop's barrier."""
+    decode = make_decode_step(model)
+    p_leaves, p_def = jax.tree_util.tree_flatten(params)
+    c_leaves, c_def = jax.tree_util.tree_flatten(cache)
+    n_p = len(p_leaves)
+    p_objs = [runtime.hetero_object(np.asarray(x), name=f"dec-p{i}")
+              for i, x in enumerate(p_leaves)]
+    c_objs = [runtime.hetero_object(np.asarray(x), name=f"dec-kv{i}")
+              for i, x in enumerate(c_leaves)]
+    tok_obj = runtime.hetero_object(np.asarray(tokens), name="dec-tok")
+    len_obj = runtime.hetero_object(np.asarray(lengths), name="dec-len")
+
+    # one kernel object for the whole loop → jit cache hits every step,
+    # and the tracer sees the same kernel identity window after window
+    def step_kernel(tok, lens, *leaves):
+        params_ = jax.tree_util.tree_unflatten(p_def, leaves[:n_p])
+        cache_ = jax.tree_util.tree_unflatten(c_def, leaves[n_p:])
+        new_tok, new_cache = decode(params_, cache_, tok, lens)
+        new_c = jax.tree_util.tree_flatten(new_cache)[0]
+        # outputs bind to the write-args in arg order: tok, lens, cache
+        return (new_tok, lens + 1) + tuple(new_c)
+
+    args = ([(tok_obj, "rw"), (len_obj, "rw")]
+            + [(o, "r") for o in p_objs] + [(o, "rw") for o in c_objs])
+    for _ in range(n_steps):
+        runtime.run(step_kernel, args, device_type=device_type,
+                    name="decode_step")
+        runtime.step_boundary()
+    runtime.barrier(timeout=timeout)
+    return tok_obj, len_obj, c_objs, c_def
 
 
 def abstract_params(model: Model):

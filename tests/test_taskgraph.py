@@ -1,0 +1,187 @@
+"""Task-graph fast path: trace → compile → replay bit-identity and the
+invalidation taxonomy (structural deviation / eviction / epoch bump /
+host-access flush), plus the pooled-engine cluster acceptance test."""
+import numpy as np
+import pytest
+
+from repro.apps.jacobi3d import run_reference, run_tasked
+from repro.core import Runtime, RuntimeConfig
+from repro.distributed.elastic import ElasticRuntime, OwnerMap
+from repro.distributed.messaging import Cluster
+
+
+def _rt(**kw):
+    kw.setdefault("memory_capacity", 1 << 28)
+    return Runtime(RuntimeConfig(**kw))
+
+
+def bump(v):
+    return v + 1.0
+
+
+def axpy(av, yv):
+    return yv + av
+
+
+# ---------------------------------------------------------------------------
+# bit-identity: replayed windows produce the same bits as interpreted ones
+# ---------------------------------------------------------------------------
+
+def test_jacobi_traced_bit_identical():
+    rng = np.random.default_rng(0)
+    u0 = rng.standard_normal((12, 12, 12)).astype(np.float32)
+    iters = 8
+    ref = run_reference(u0, iters)
+    with _rt() as rt_i:
+        interp = run_tasked(u0, iters, rt_i, over_decomposition=2)
+    with _rt(trace_graphs=True, replay_after=3) as rt_t:
+        traced = run_tasked(u0, iters, rt_t, over_decomposition=2)
+        st = rt_t.stats()
+    assert st["graphs_traced"] >= 1
+    assert st["graph_replays"] >= 1
+    assert st["replayed_tasks"] > 0
+    # the fast path must be invisible: bit-identical, not just close
+    np.testing.assert_array_equal(traced, interp)
+    np.testing.assert_allclose(traced, ref, rtol=1e-6, atol=1e-6)
+
+
+def _train_loop(rt, steps):
+    """Toy microbatch train step: grad then in-place apply — the
+    recurring two-task window of a training loop."""
+    w = rt.hetero_object(np.full((64,), 0.5, np.float32), name="w")
+    g = rt.hetero_object(np.zeros((64,), np.float32), name="g")
+    x = rt.hetero_object(np.linspace(0.0, 1.0, 64, dtype=np.float32),
+                         name="x")
+
+    def grad(xv, wv, out):
+        return (wv - xv) * 0.5
+
+    def apply_(gv, wv):
+        return wv - 0.1 * gv
+
+    for _ in range(steps):
+        rt.run(grad, [(x, "r"), (w, "r"), (g, "w")])
+        rt.run(apply_, [(g, "r"), (w, "rw")])
+        rt.step_boundary()
+    rt.barrier()
+    return np.asarray(w.get()).copy()
+
+
+def test_microbatch_train_traced_bit_identical():
+    with _rt() as rt_i:
+        w_interp = _train_loop(rt_i, steps=10)
+    with _rt(trace_graphs=True, replay_after=3) as rt_t:
+        w_traced = _train_loop(rt_t, steps=10)
+        st = rt_t.stats()
+    assert st["graphs_traced"] == 1
+    assert st["graph_replays"] >= 1
+    np.testing.assert_array_equal(w_traced, w_interp)
+
+
+# ---------------------------------------------------------------------------
+# invalidation taxonomy
+# ---------------------------------------------------------------------------
+
+def test_invalidation_on_shape_change():
+    with _rt(trace_graphs=True, replay_after=2) as rt:
+        a = rt.hetero_object(np.ones((16,), np.float32))
+        for _ in range(4):
+            rt.run(bump, [(a, "rw")])
+            rt.step_boundary()
+        rt.barrier()
+        st = rt.stats()
+        assert st["graphs_traced"] == 1 and st["graph_replays"] >= 1
+        # a different-shaped object in the same structural position is a
+        # deviation (shape is part of the signature via object identity)
+        b = rt.hetero_object(np.ones((32,), np.float32))
+        rt.run(bump, [(b, "rw")])
+        rt.step_boundary()
+        rt.barrier()
+        assert rt.stats()["graph_invalidations"] >= 1
+        np.testing.assert_allclose(a.get(), 5.0)
+        np.testing.assert_allclose(b.get(), 2.0)
+
+
+def test_invalidation_on_eviction():
+    with _rt(trace_graphs=True, replay_after=2) as rt:
+        a = rt.hetero_object(np.ones((16,), np.float32))
+        y = rt.hetero_object(np.zeros((16,), np.float32))
+        for _ in range(3):
+            rt.run(axpy, [(a, "r"), (y, "rw")])
+            rt.step_boundary()
+        rt.barrier()
+        assert rt.stats()["graph_replays"] >= 1
+        # evict the read-only entry replica the replay plan counted on
+        devs = sorted(rt.residency.devices_of(a))
+        assert devs, "compiled entry should be device-resident"
+        assert rt._evict(a, devs[0])
+        inv0 = rt.stats()["graph_invalidations"]
+        rt.run(axpy, [(a, "r"), (y, "rw")])
+        rt.step_boundary()
+        rt.barrier()
+        # the stale window still executed correctly (coherence walk) and
+        # the plan was retired afterwards
+        assert rt.stats()["graph_invalidations"] == inv0 + 1
+        np.testing.assert_allclose(y.get(), 4.0)
+
+
+def test_invalidation_on_epoch_bump():
+    cfg = RuntimeConfig(memory_capacity=1 << 26, trace_graphs=True,
+                        replay_after=2)
+    with Cluster(2, cfg) as c:
+        rt0 = c.ranks[0].runtime
+        a = rt0.hetero_object(np.ones((8,), np.float32))
+        for _ in range(3):
+            rt0.run(bump, [(a, "rw")])
+            rt0.step_boundary()
+        rt0.barrier()
+        assert rt0._tracer.graph() is not None
+        er = ElasticRuntime(c, OwnerMap())
+        er._bump_epoch()
+        assert er.epoch == 1
+        # placements captured under the old epoch are gone on every rank
+        assert rt0._tracer.graph() is None
+        assert rt0.stats()["graph_invalidations"] >= 1
+        # recurrence detection restarts cleanly afterwards
+        for _ in range(3):
+            rt0.run(bump, [(a, "rw")])
+            rt0.step_boundary()
+        rt0.barrier()
+        assert rt0.stats()["graphs_traced"] == 2
+        np.testing.assert_allclose(a.get(), 7.0)
+
+
+def test_host_read_flushes_but_keeps_graph():
+    with _rt(trace_graphs=True, replay_after=2) as rt:
+        a = rt.hetero_object(np.zeros((8,), np.float32))
+        for _ in range(3):
+            rt.run(bump, [(a, "rw")])
+            rt.step_boundary()
+        rt.barrier()
+        assert rt.stats()["graph_replays"] == 1
+        # mid-window host read: the parked task must flush so the read
+        # observes its write — but the graph stays armed
+        rt.run(bump, [(a, "rw")])
+        np.testing.assert_allclose(a.get(), 4.0)       # flush + observe
+        rt.step_boundary()
+        rt.barrier()
+        st = rt.stats()
+        assert rt._tracer.graph() is not None
+        assert st["graph_invalidations"] == 0
+        # next full window replays again
+        rt.run(bump, [(a, "rw")])
+        rt.step_boundary()
+        rt.barrier()
+        assert rt.stats()["graph_replays"] == 2
+        np.testing.assert_allclose(a.get(), 5.0)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: pooled engine under sustained cluster barrier traffic
+# ---------------------------------------------------------------------------
+
+def test_cluster_barrier_200_iterations_pooled():
+    cfg = RuntimeConfig(memory_capacity=1 << 26, pool_workers=4)
+    with Cluster(2, cfg) as c:
+        for _ in range(200):
+            c.barrier(timeout=30.0)
