@@ -1,0 +1,162 @@
+"""INTEG-Recover rung: end-to-end data integrity on the distributed
+Jacobi proxy (ISSUE tentpole — checksummed transfers, corruption
+injection, lineage/replica recovery).
+
+Four arms, all on a simulated network with a billed control VC:
+
+  clean — 4 ranks, per-iteration slab replication to a ring buddy, no
+      faults. The oracle baseline every other arm is compared against.
+
+  corrupt — the SAME run under seeded wire corruption (every directed
+      link bit-flips host-staged payloads with p=0.05), two injected
+      kernel faults (absorbed by ``task_retries``), a rank killed after
+      an iteration commits AND that iteration's checkpoint leaf for one
+      of the dead rank's slabs bit-flipped on disk. Recovery prefers the
+      live replica, the checksum layer rejects every flipped payload and
+      the reliability layer retransmits — the run must finish with ZERO
+      hangs and an answer bit-identical to the clean arm, with
+      checksum_fail/chunks_rejected/retries all nonzero as evidence the
+      corruption actually happened.
+
+  ckpt_fallback — no replication: the killed rank's slab can only come
+      from the checkpoint, whose newest copy of that leaf is corrupted.
+      The digest-validated restore DETECTS the corruption
+      (ckpt_verify_fail ≥ 1) and falls back to the next-older committed
+      step instead of feeding garbage back in. The run completes (answer
+      rolls back one committed iteration for that slab — correctness
+      here is "detected + degraded gracefully", not bit-identity).
+
+  verify_overhead — msgrate's A/B with ``cfg.verify_payloads`` flipped
+      per batch on one cluster: the clean-path cost of the fold64
+      digest at eager and rendezvous sizes (claim: within ~5% at the
+      MSG-Pipeline large size).
+
+Run via ``tasking_overhead.py --only INTEG-Recover`` (the dry-run sweep
+does this) or directly: ``python benchmarks/integ_recover.py``.
+"""
+import argparse
+import json
+import tempfile
+import time
+from typing import Dict
+
+import numpy as np
+
+from repro.core import RuntimeConfig
+from repro.distributed import Cluster
+from repro.apps.jacobi3d import run_cluster_elastic, run_reference
+
+_NET = dict(latency_s=100e-6, bw_bytes_per_s=4e9, ctrl_drain_per_s=2e5)
+
+
+def _cfg() -> RuntimeConfig:
+    # task_retries: the corrupt arm plants kernel faults that must be
+    # absorbed by retry, not surfaced. chunk_bytes pinned small so each
+    # slab streams as several chunks — more corruptible wire crossings
+    # per run, so the seeded flips reliably hit the chunk path too.
+    return RuntimeConfig(memory_capacity=1 << 26, task_retries=2,
+                         chunk_bytes=64 << 10,
+                         retry_backoff_s=0.02, retry_tick_s=0.002)
+
+
+def run_integ(n: int = 64, iters: int = 6, ranks: int = 4,
+              corrupt_p: float = 0.1, seed: int = 7) -> Dict:
+    rng = np.random.default_rng(0)
+    # slab size must clear the eager threshold so replication/scatter
+    # travel as host-staged rendezvous streams — the corruptible path
+    u0 = rng.standard_normal((n, n // 2, n // 2)).astype(np.float32)
+    row: Dict = {"n": n, "iters": iters, "ranks": ranks,
+                 "corrupt_p": corrupt_p, "ctrl_billed": True}
+
+    kill_rank, kill_it = ranks - 2, 2
+    revive_it = max(kill_it + 1, min(iters - 2, kill_it + 2))
+    bad_leaf = f"slab{kill_rank}"        # owned by the rank about to die
+
+    # -- clean arm: replication on, no faults ---------------------------
+    t0 = time.perf_counter()
+    with Cluster(ranks, _cfg(), **_NET) as c:
+        clean, rep_clean = run_cluster_elastic(u0, iters, c, replicate=True)
+    row["clean"] = {
+        "wall_s": round(time.perf_counter() - t0, 4),
+        "integrity": rep_clean["integrity"],
+    }
+    ref = run_reference(u0, iters)
+    row["oracle_ok"] = bool(np.allclose(clean, ref, rtol=1e-5, atol=1e-6))
+
+    # -- corrupt arm: wire flips + kernel faults + kill + bad leaf ------
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        t0 = time.perf_counter()
+        with Cluster(ranks, _cfg(), **_NET) as c:
+            fi = c.fault_injector(seed=seed)
+            fi.fail_task(1, times=2)
+            out, rep = run_cluster_elastic(
+                u0, iters, c, ckpt_dir=ckpt_dir, replicate=True,
+                corrupt_links=corrupt_p,
+                kill=(kill_rank, kill_it),
+                revive_at=(kill_rank, revive_it),
+                corrupt_leaf_at=(kill_it, bad_leaf),
+                heartbeat_interval_s=0.02, heartbeat_timeout_s=0.4)
+            wall = time.perf_counter() - t0
+            fi_stats = dict(fi.stats)
+    e = rep["elastic"]
+    row["corrupt"] = {
+        "wall_s": round(wall, 4),
+        "killed_rank": kill_rank, "kill_iter": kill_it,
+        "corrupted_leaf": bad_leaf,
+        "recoveries": e["recoveries"], "grows": e["grows"],
+        "dead_detected": e["dead"],
+        "recovery_stall_s": round(e["recovery_stall_s"], 6),
+        "bytes_migrated": e["bytes_migrated"],
+        "epochs": rep["epochs"],
+        "faults": fi_stats,
+        "integrity": rep["integrity"],
+        "bitwise_identical": bool(np.array_equal(out, clean)),
+    }
+
+    # -- ckpt_fallback arm: corrupted leaf with NO replica --------------
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        t0 = time.perf_counter()
+        with Cluster(ranks, _cfg(), **_NET) as c:
+            fi = c.fault_injector(seed=seed + 1)
+            out, rep = run_cluster_elastic(
+                u0, iters, c, ckpt_dir=ckpt_dir, replicate=False,
+                kill=(kill_rank, kill_it),
+                corrupt_leaf_at=(kill_it, bad_leaf),
+                heartbeat_interval_s=0.02, heartbeat_timeout_s=0.4)
+        wall = time.perf_counter() - t0
+    row["ckpt_fallback"] = {
+        "wall_s": round(wall, 4),
+        "recoveries": rep["elastic"]["recoveries"],
+        "integrity": rep["integrity"],
+        "corruption_detected":
+            rep["integrity"]["ckpt_verify_fail"] >= 1,
+        "completed": bool(np.isfinite(out).all()),
+    }
+
+    # -- verify_overhead arm: fold64 digest cost A/B --------------------
+    import msgrate   # benchmarks/ is on sys.path as a script
+    overhead = msgrate.run_verify_overhead(
+        sizes=(8 << 10, 4 << 20), iters=8,
+        latency_s=30e-6, bw_bytes_per_s=4e9)
+    row["verify_overhead"] = overhead
+    return row
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=64)
+    ap.add_argument("--iters", type=int, default=6)
+    ap.add_argument("--ranks", type=int, default=4)
+    ap.add_argument("--corrupt-p", type=float, default=0.05)
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+    row = run_integ(n=args.n, iters=args.iters, ranks=args.ranks,
+                    corrupt_p=args.corrupt_p)
+    print(json.dumps(row, indent=2))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(row, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

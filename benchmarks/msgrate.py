@@ -163,6 +163,56 @@ def run(sizes=SIZES, iters: int = 10, latency_s: float = 30e-6,
     return rows
 
 
+def run_verify_overhead(sizes=(8 << 10, 1 << 20, 4 << 20), iters: int = 10,
+                        latency_s: float = 30e-6,
+                        bw_bytes_per_s: float = 4e9,
+                        eager_threshold: int = 64 << 10,
+                        chunk_bytes: Optional[int] = None) -> List[Dict]:
+    """INTEG-Recover overhead arm: end-to-end delivery latency with the
+    fold64 payload checksum ON vs OFF, A/B'd on one cluster the same way
+    ``run`` A/Bs protocols — ``cfg.verify_payloads`` is consulted at
+    send-digest and receive-verify time, so flipping it between batches
+    isolates the digest cost on identical threads/topology/caches. The
+    claim: the vectorized fold runs far above simulated wire bandwidth,
+    so the clean-path cost stays within a few percent even at 4 MiB."""
+    rows: List[Dict] = []
+    cfg = RuntimeConfig(memory_capacity=1 << 30,
+                        eager_threshold=eager_threshold,
+                        chunk_bytes=chunk_bytes)
+    with Cluster(2, cfg, latency_s=latency_s,
+                 bw_bytes_per_s=bw_bytes_per_s) as cluster:
+
+        def timed(nb: int, verify: bool) -> float:
+            cfg.verify_payloads = verify
+            return _one_batch(cluster, nb, _batch_count(nb))
+
+        for _ in range(2):               # compile + seed the bw estimate
+            timed(1 << 20, verify=True)
+            timed(1 << 20, verify=False)
+        for nb in sizes:
+            timed(nb, verify=True)       # per-size shape warmup
+            timed(nb, verify=False)
+            on_lat, off_lat = [], []
+            for i in range(iters):
+                if i % 2 == 0:
+                    on_lat.append(timed(nb, verify=True))
+                    off_lat.append(timed(nb, verify=False))
+                else:
+                    off_lat.append(timed(nb, verify=False))
+                    on_lat.append(timed(nb, verify=True))
+            on_us = float(np.median(on_lat)) * 1e6
+            off_us = float(np.median(off_lat)) * 1e6
+            rows.append({
+                "bytes": nb,
+                "protocol": "eager" if nb <= eager_threshold else "rdzv",
+                "verify_us": round(on_us, 1),
+                "noverify_us": round(off_us, 1),
+                "overhead_pct": round((on_us / off_us - 1.0) * 100, 2),
+            })
+        cfg.verify_payloads = True
+    return rows
+
+
 def _one_small(cluster: Cluster, nbytes: int) -> float:
     """One timed small-message ONE-WAY delivery (send call → handler
     invocation on the peer, receiver-timestamped)."""

@@ -73,7 +73,8 @@ LADDER_BY_NAME = dict(LADDER)
 
 # rungs with their own workload/measurement, appended after the ladder
 EXTRA_RUNGS = ["SCHED-Locality", "MSG-Pipeline", "MSG-HOL",
-               "MSG-Congestion", "ELASTIC-Recover", "TASK-Replay"]
+               "MSG-Congestion", "ELASTIC-Recover", "INTEG-Recover",
+               "TASK-Replay"]
 
 # subset of Runtime.stats() recorded per rung in the JSON report
 _REPORT_KEYS = ("staging_hits", "staging_misses", "request_pool_hits",
@@ -181,6 +182,20 @@ def bench_elastic_recover(iters: int = 6) -> Dict:
     the unfaulted elastic run bit-for-bit — no restart, bounded stall."""
     import elastic_recover   # benchmarks/ is on sys.path as a script
     return elastic_recover.run_recover(iters=max(iters, 4))
+
+
+def bench_integ_recover(iters: int = 6) -> Dict:
+    """INTEG-Recover rung: the same distributed Jacobi under seeded wire
+    bit-flips, injected kernel faults, a mid-run kill AND a corrupted
+    checkpoint leaf — checksums reject every flipped payload, retries/
+    NACKs retransmit, recovery takes the live replica, and the answer
+    stays bit-identical to the clean run. Plus the fold64 digest's
+    clean-path cost A/B'd on the MSG-Pipeline path."""
+    import integ_recover   # benchmarks/ is on sys.path as a script
+    # ≥6 iterations: the kill/revive schedule needs iterations after the
+    # revive, and the corruption probability needs enough wire crossings
+    # to fire deterministically under the fixed seed
+    return integ_recover.run_integ(iters=max(iters, 6))
 
 
 # power-of-two scales: replay fuses both kernels under ONE jit, and XLA
@@ -409,6 +424,30 @@ def main(argv=None):
               f"alive{int(not st['dead_detected'])}")
         print(f"figELA_ELASTIC-Recover_summary,,"
               f"recoveries{fr['recoveries']}_grows{fr['grows']}_"
+              f"oracle{int(row['oracle_ok'])}")
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(row, f, indent=2)
+        return
+    if args.only == "INTEG-Recover":
+        row = bench_integ_recover(iters=max(args.iters // 5, 4))
+        co, fb = row["corrupt"], row["ckpt_fallback"]
+        ci = co["integrity"]
+        print(f"figINT_INTEG-Recover_corrupt,"
+              f"{co['recovery_stall_s'] * 1e6:.1f},"
+              f"cksum{ci['checksum_fail']}_retries{ci['retries']}_"
+              f"bitwise{int(co['bitwise_identical'])}")
+        print(f"figINT_INTEG-Recover_ckpt_fallback,,"
+              f"verify_fail{fb['integrity']['ckpt_verify_fail']}_"
+              f"detected{int(fb['corruption_detected'])}_"
+              f"completed{int(fb['completed'])}")
+        for r in row["verify_overhead"]:
+            print(f"figINT_INTEG-Recover_verify_{r['bytes']},"
+                  f"{r['verify_us']:.1f},"
+                  f"{r['protocol']}_overhead{r['overhead_pct']:+.2f}pct")
+        print(f"figINT_INTEG-Recover_summary,,"
+              f"recoveries{co['recoveries']}_"
+              f"corrupted{co['faults']['corrupted']}_"
               f"oracle{int(row['oracle_ok'])}")
         if args.json:
             with open(args.json, "w") as f:

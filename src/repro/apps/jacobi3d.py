@@ -309,6 +309,23 @@ def _recv_eslab(ctx, obj):
     ctx.rank.register_object(("jslab", ctx.message.user["slab"]), obj)
 
 
+@handler(name="jacobi_replica")
+def _recv_replica(ctx, obj):
+    """Landing half of slab replication: register the committed bytes as
+    a live replica under the slab's global key (so ``ElasticRuntime``'s
+    replica-first recovery finds it) and mark the (iteration, slab) pair
+    arrived for the driver's replication barrier."""
+    u = ctx.message.user
+    old = ctx.rank.objects.get(("jslab", u["slab"]))
+    if old is not None and old is not obj:
+        ctx.rank.runtime.residency.forget(old)
+    ctx.rank.register_object(("jslab", u["slab"]), obj)
+    st = getattr(ctx.rank, "_jac_rep", None)
+    if st is not None:
+        with st["lock"]:
+            st["got"].add((u["it"], u["slab"]))
+
+
 @handler(name="jac_halo_mark")
 def _halo_mark(ctx, obj):
     # obj is the preregistered halo target; None would mean the put beat
@@ -327,6 +344,9 @@ def run_cluster_elastic(u0: np.ndarray, iters: int, cluster, *,
                         kill: Optional[Tuple[int, int]] = None,
                         revive_at: Optional[Tuple[int, int]] = None,
                         freeze: Optional[Tuple[int, int, float]] = None,
+                        replicate: bool = False,
+                        corrupt_links: float = 0.0,
+                        corrupt_leaf_at: Optional[Tuple[int, str]] = None,
                         heartbeat_interval_s: float = 0.02,
                         heartbeat_timeout_s: float = 0.5,
                         straggler_factor: float = 25.0,
@@ -342,6 +362,17 @@ def run_cluster_elastic(u0: np.ndarray, iters: int, cluster, *,
     it. Recovery restores lost slabs from the per-iteration checkpoint —
     exact committed bytes, so a faulted run matches an unfaulted one
     bit-for-bit. Returns ``(result, report)``.
+
+    Integrity knobs (ISSUE: INTEG-Recover): ``replicate=True`` streams
+    each slab's committed bytes to a buddy rank (next alive rank in the
+    ring) every iteration, so recovery prefers a live replica over disk.
+    ``corrupt_links=p`` bit-flips every host-staged payload on every
+    directed link with probability ``p`` — the checksum layer rejects
+    the flipped bytes and the reliability layer retransmits, so the run
+    still converges bit-identically. ``corrupt_leaf_at=(it, key)`` flips
+    one bit in that committed checkpoint leaf right after iteration
+    ``it`` commits (silent storage corruption); the digest-validated
+    restore path detects it and falls back to a replica or older step.
     """
     from repro.checkpoint.checkpointer import Checkpointer
     from repro.distributed.elastic import ElasticRuntime
@@ -356,20 +387,31 @@ def run_cluster_elastic(u0: np.ndarray, iters: int, cluster, *,
         owner.assign(i, r)
 
     faults = cluster.faults
-    if (kill or revive_at or freeze) and faults is None:
+    if (kill or revive_at or freeze or corrupt_links
+            or corrupt_leaf_at) and faults is None:
         faults = cluster.fault_injector()
-    if kill is not None and ckpt_dir is None:
-        raise ValueError("kill schedule needs ckpt_dir: lost slabs are "
-                         "restored from the committed checkpoint")
+    if kill is not None and ckpt_dir is None and not replicate:
+        raise ValueError("kill schedule needs ckpt_dir or replicate=True: "
+                         "lost slabs are restored from the committed "
+                         "checkpoint or a live replica")
+    if corrupt_leaf_at is not None and ckpt_dir is None:
+        raise ValueError("corrupt_leaf_at needs ckpt_dir")
+    if corrupt_links:
+        for a in range(n):
+            for b in range(n):
+                if a != b:
+                    faults.set_link(a, b, corrupt=corrupt_links)
 
     ckpt = (Checkpointer(ckpt_dir, keep=3, async_save=False)
             if ckpt_dir else None)
 
     def restore_fn(oid):
-        step = ckpt.latest_step()
-        if step is None:
+        # newest committed copy of the leaf that passes digest/shape
+        # validation — a corrupted newest step falls back to an older one
+        if ckpt.latest_step() is None:
             raise RuntimeError("rank loss before the first checkpoint")
-        return ckpt.restore_leaf(step, f"slab{oid}")
+        _step, arr = ckpt.restore_leaf_fallback(f"slab{oid}")
+        return arr
 
     er = ElasticRuntime(
         cluster, owner, key_fn=lambda oid: ("jslab", oid),
@@ -380,6 +422,7 @@ def run_cluster_elastic(u0: np.ndarray, iters: int, cluster, *,
 
     for r in ranks:
         r._jac_halos = {"lock": threading.Lock(), "got": set()}
+        r._jac_rep = {"lock": threading.Lock(), "got": set()}
 
     # -- scatter against the initial owner map -------------------------
     for i, (lo, hi) in enumerate(bounds):
@@ -454,6 +497,7 @@ def run_cluster_elastic(u0: np.ndarray, iters: int, cluster, *,
     er.start(poll_period_s)
     try:
         for it in range(iters):
+            rep_expected: List[Tuple[int, int]] = []
             while True:               # redo loop: one pass per world epoch
                 with er.hold():
                     epoch0 = er.epoch
@@ -499,10 +543,46 @@ def run_cluster_elastic(u0: np.ndarray, iters: int, cluster, *,
                                 ranks[owner.owner(i)]
                                 .objects[("jslab", i)].get())
                             for i in range(S)}, block=True)
+                    if replicate:
+                        # stream each slab's committed bytes to its ring
+                        # buddy; recovery will prefer this live replica
+                        # over a disk read. Stale replicas elsewhere are
+                        # dropped first — a later recovery must never
+                        # resurrect an older iteration's bytes.
+                        for i in range(S):
+                            own = owner.owner(i)
+                            cands = sorted(w for w in alive if w != own)
+                            if not cands:
+                                continue
+                            buddy = next((w for w in cands if w > own),
+                                         cands[0])
+                            for r in ranks:
+                                if r.rank in (own, buddy):
+                                    continue
+                                stale = r.objects.pop(("jslab", i), None)
+                                if stale is not None:
+                                    r.runtime.residency.forget(stale)
+                            ranks[own].send(
+                                buddy, "jacobi_replica",
+                                ranks[own].objects[("jslab", i)],
+                                user={"slab": i, "it": it})
+                            rep_expected.append((buddy, i))
                     break              # iteration committed
+            # replication barrier OUTSIDE the hold (the buddy's pump must
+            # run to land the stream) and BEFORE the fault schedule: the
+            # replica must exist before the rank it protects against dies
+            t_end = time.time() + wait_timeout_s
+            for buddy, i in rep_expected:
+                while (it, i) not in ranks[buddy]._jac_rep["got"]:
+                    assert time.time() < t_end, \
+                        f"replica of slab {i} stalled at iteration {it}"
+                    time.sleep(0.002)
             # fault schedule fires AFTER the commit point, so a restore
             # replays exactly this iteration's bytes
             if faults is not None:
+                if corrupt_leaf_at is not None and it == corrupt_leaf_at[0]:
+                    faults.corrupt_checkpoint_leaf(ckpt_dir, it,
+                                                   corrupt_leaf_at[1])
                 if kill is not None and it == kill[1]:
                     faults.kill_rank(kill[0])
                 if freeze is not None and it == freeze[1]:
@@ -517,6 +597,17 @@ def run_cluster_elastic(u0: np.ndarray, iters: int, cluster, *,
     report["epochs"] = er.epoch
     if faults is not None:
         report["faults"] = dict(faults.stats)
+    report["integrity"] = {
+        "checksum_fail": sum(r.stats["checksum_fail"] for r in ranks),
+        "chunks_rejected": sum(r.stats["chunks_rejected"] for r in ranks),
+        "retries": sum(r.stats["retries"] for r in ranks),
+        "task_retries": sum(r.runtime.stats()["task_retries"]
+                            for r in ranks),
+        "lineage_recomputes": sum(r.runtime.stats()["lineage_recomputes"]
+                                  for r in ranks),
+        "ckpt_verify_fail": ckpt.stats["ckpt_verify_fail"] if ckpt else 0,
+        "restore_fallbacks": er.stats["restore_fallbacks"],
+    }
     out = np.empty_like(u0)
     for i, (lo, hi) in enumerate(bounds):
         out[lo:hi] = np.asarray(

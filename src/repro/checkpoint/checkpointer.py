@@ -2,7 +2,7 @@
 tolerance.
 
 Layout per step:  <dir>/step_<N>/
-    manifest.json            tree structure + per-leaf metadata
+    manifest.json            tree structure + per-leaf metadata (+ digest)
     <leafkey>.npy            one file per leaf (host-gathered)
     COMMIT                   written last — a checkpoint without COMMIT is
                              torn and ignored by restore (crash-safe)
@@ -10,6 +10,20 @@ Layout per step:  <dir>/step_<N>/
 Restore is mesh-agnostic: leaves are loaded on host and re-placed with the
 *current* shardings, so a 512-chip checkpoint restores onto a shrunk or
 grown mesh (elastic rescale path).
+
+Integrity: each leaf's fold64 content digest is computed at save time
+(once, from the already-host-gathered array) and recorded in the
+manifest. Every restore path re-digests the loaded bytes and validates
+shape/dtype against the manifest — a silently bit-rotted or truncated
+leaf raises ``CheckpointIntegrityError`` instead of feeding garbage back
+into the job. ``restore_leaf_fallback`` turns that detection into
+recovery: walk committed steps newest → oldest and return the first
+copy of the leaf that verifies. Manifests written before digests existed
+restore fine (the digest check is skipped when the key is absent).
+
+Async saves are no longer fire-and-forget: a failed background write is
+recorded and re-raised at the next ``wait()`` or ``save()`` — the
+caller that believes a checkpoint exists must find out it does not.
 """
 from __future__ import annotations
 
@@ -18,10 +32,16 @@ import os
 import re
 import shutil
 import threading
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+from repro.core.integrity import digest_array
+
+
+class CheckpointIntegrityError(RuntimeError):
+    """A checkpoint leaf failed digest or shape/dtype validation."""
 
 
 def _key_of(path) -> str:
@@ -39,17 +59,24 @@ def _key_of(path) -> str:
 
 
 class Checkpointer:
-    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True,
+                 digest: bool = True):
         self.dir = directory
         self.keep = keep
         self.async_save = async_save
+        self.digest = digest
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        self.stats = {"ckpt_verify_fail": 0, "save_errors": 0}
         os.makedirs(directory, exist_ok=True)
 
     # ------------------------------------------------------------------
     def save(self, step: int, state: Any, block: bool = False) -> None:
         """Snapshot on host, then write asynchronously (training continues
-        while the write is in flight — compute/IO overlap)."""
+        while the write is in flight — compute/IO overlap). A pending
+        failure from an earlier async write is raised here first: the
+        caller must not keep rotating checkpoints on top of a save
+        pipeline that is silently broken."""
         flat = jax.tree_util.tree_flatten_with_path(state)[0]
         host_leaves = [(_key_of(p), np.asarray(v)) for p, v in flat]
         self.wait()
@@ -62,8 +89,11 @@ class Checkpointer:
             for key, arr in host_leaves:
                 fn = re.sub(r"[^A-Za-z0-9_.-]", "_", key) + ".npy"
                 np.save(os.path.join(tmp, fn), arr)
-                manifest[key] = {"file": fn, "shape": list(arr.shape),
-                                 "dtype": str(arr.dtype)}
+                entry = {"file": fn, "shape": list(arr.shape),
+                         "dtype": str(arr.dtype)}
+                if self.digest:
+                    entry["digest"] = digest_array(arr)
+                manifest[key] = entry
             with open(os.path.join(tmp, "manifest.json"), "w") as f:
                 json.dump({"step": step, "leaves": manifest}, f)
             with open(os.path.join(tmp, "COMMIT"), "w") as f:
@@ -73,8 +103,15 @@ class Checkpointer:
             os.rename(tmp, final)
             self._gc()
 
+        def write_guarded():
+            try:
+                write()
+            except BaseException as e:  # surfaced at next wait()/save()
+                self.stats["save_errors"] += 1
+                self._error = e
+
         if self.async_save and not block:
-            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread = threading.Thread(target=write_guarded, daemon=True)
             self._thread.start()
         else:
             write()
@@ -83,6 +120,10 @@ class Checkpointer:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError(
+                f"async checkpoint save failed: {err!r}") from err
 
     def _gc(self) -> None:
         steps = self.all_steps()
@@ -103,10 +144,34 @@ class Checkpointer:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    # ------------------------------------------------------------------
+    def _verified_leaf(self, step: int, key: str, meta: Dict,
+                       path: str) -> np.ndarray:
+        """Load one leaf and validate it against its manifest entry:
+        shape and dtype must match exactly, and (when the manifest
+        carries one) the fold64 digest of the loaded bytes must equal
+        the digest recorded at save time."""
+        arr = np.load(path)
+        if (list(arr.shape) != list(meta["shape"])
+                or str(arr.dtype) != meta["dtype"]):
+            self.stats["ckpt_verify_fail"] += 1
+            raise CheckpointIntegrityError(
+                f"checkpoint step {step} leaf {key!r}: file has "
+                f"shape={arr.shape} dtype={arr.dtype}, manifest says "
+                f"shape={tuple(meta['shape'])} dtype={meta['dtype']}")
+        want = meta.get("digest")
+        if want is not None and digest_array(arr) != want:
+            self.stats["ckpt_verify_fail"] += 1
+            raise CheckpointIntegrityError(
+                f"checkpoint step {step} leaf {key!r}: content digest "
+                f"mismatch (bit rot or torn write)")
+        return arr
+
     def restore(self, step: int, abstract_state: Any,
                 shardings: Optional[Any] = None) -> Any:
         """Load ``step`` into the structure of ``abstract_state``; leaves are
-        device_put with ``shardings`` when given (mesh-agnostic restore)."""
+        device_put with ``shardings`` when given (mesh-agnostic restore).
+        Every leaf is digest/shape/dtype-verified before placement."""
         d = os.path.join(self.dir, f"step_{step}")
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)["leaves"]
@@ -118,7 +183,8 @@ class Checkpointer:
         for i, (p, ref) in enumerate(flat):
             key = _key_of(p)
             meta = manifest[key]
-            arr = np.load(os.path.join(d, meta["file"]))
+            arr = self._verified_leaf(step, key, meta,
+                                      os.path.join(d, meta["file"]))
             want_dtype = getattr(ref, "dtype", arr.dtype)
             arr = arr.astype(want_dtype)
             if shard_flat is not None:
@@ -131,14 +197,34 @@ class Checkpointer:
         """Load ONE leaf of a committed checkpoint by its manifest key —
         the elastic-recovery path: a rank died, only its chunks need
         restoring, and re-reading the whole tree would stall recovery on
-        I/O proportional to the world size instead of the loss."""
+        I/O proportional to the world size instead of the loss. The leaf
+        is digest/shape/dtype-verified before it is handed back."""
         d = os.path.join(self.dir, f"step_{step}")
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)["leaves"]
         if key not in manifest:
             raise KeyError(f"checkpoint step {step} has no leaf {key!r}; "
                            f"has {sorted(manifest)[:8]}...")
-        return np.load(os.path.join(d, manifest[key]["file"]))
+        meta = manifest[key]
+        return self._verified_leaf(step, key, meta,
+                                   os.path.join(d, meta["file"]))
+
+    def restore_leaf_fallback(self, key: str) -> Tuple[int, np.ndarray]:
+        """Detection → recovery: return ``(step, leaf)`` from the NEWEST
+        committed step whose copy of ``key`` verifies, skipping corrupted
+        or missing copies. Raises ``CheckpointIntegrityError`` only when
+        every retained step fails."""
+        steps = self.all_steps()
+        last_err: Optional[BaseException] = None
+        for step in reversed(steps):
+            try:
+                return step, self.restore_leaf(step, key)
+            except (CheckpointIntegrityError, KeyError, OSError,
+                    ValueError) as e:
+                last_err = e
+        raise CheckpointIntegrityError(
+            f"no committed step holds a valid copy of leaf {key!r} "
+            f"(searched {len(steps)} steps)") from last_err
 
     def restore_latest(self, abstract_state: Any,
                        shardings: Optional[Any] = None) -> Any:

@@ -12,7 +12,11 @@ from repro.core.residency import (PLACEMENTS, DataGravityPolicy,  # noqa: F401
                                   LoadOnlyPolicy, PlacementPolicy,
                                   ResidencyLedger)
 from repro.core.progress import Lane, ProgressEngine  # noqa: F401
-from repro.core.runtime import Runtime, RuntimeConfig  # noqa: F401
+from repro.core.integrity import (ChecksumError, digest_array,  # noqa: F401
+                                  verify_array)
+from repro.core.lineage import LineageLedger, LineageRecord  # noqa: F401
+from repro.core.runtime import (InjectedTaskFault, Runtime,  # noqa: F401
+                                RuntimeConfig)
 from repro.core.taskgraph import GraphTracer, TracedGraph  # noqa: F401
 from repro.core.topology import (InterconnectModel,  # noqa: F401
                                  LinkEstimate, probe_runtime_links)

@@ -47,6 +47,11 @@ class HeteroObject:
         # references them; donation would delete the array under the NIC)
         self.device_pins = 0
         self._pin_waiters: list = []
+        # monotonically-increasing write version: bumped on every
+        # write-rebind (task output, distributed put, host write pin,
+        # compiled-graph replay). Lineage records are valid for exactly
+        # one generation — the cycle-safety anchor for in-place chains.
+        self.generation = 0
         if value is not None:
             value = np.asarray(value)
             self.shape, self.dtype = value.shape, value.dtype

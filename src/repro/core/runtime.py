@@ -84,6 +84,7 @@ from repro.core.device_api import Device, JaxDevice, discover_devices
 from repro.core.futures import HFuture
 from repro.core.hetero_object import HOST, HeteroObject
 from repro.core.hetero_task import HeteroTask, TaskState
+from repro.core.lineage import LineageLedger
 from repro.core.memory import RequestPool, StagingPool
 from repro.core.progress import ProgressEngine
 from repro.core.residency import PLACEMENTS, ResidencyLedger
@@ -91,6 +92,10 @@ from repro.core.scheduler import SCHEDULERS, Scheduler
 from repro.core.taskgraph import GraphTracer
 from repro.core.topology import (InterconnectModel, probe_link,
                                  probe_runtime_links)
+
+
+class InjectedTaskFault(RuntimeError):
+    """Deterministic kernel fault planted by FaultInjector.fail_task."""
 
 
 @dataclasses.dataclass
@@ -171,6 +176,25 @@ class RuntimeConfig:
     # ALL lanes; overflow workers spawn transiently when every base
     # worker is parked in a blocking job). 0 = legacy thread-per-lane.
     pool_workers: int = 4
+    # -- end-to-end data integrity (core/integrity.py, core/lineage.py) --
+    # verify_payloads: compute a content digest once at serialization for
+    # every host-visible payload/chunk and verify it on receive; a failed
+    # check counts in Rank.stats["checksum_fail"] and the bytes are
+    # treated as never-arrived (the reliability layer retransmits), so
+    # corruption surfaces as a retry — never a hang or a wrong answer
+    verify_payloads: bool = True
+    # ckpt_digest: per-leaf content digests in checkpoint manifests,
+    # verified by restore/restore_leaf (Checkpointer honors this default
+    # unless its own ctor argument overrides it)
+    ckpt_digest: bool = True
+    # lineage_depth: max producer-chain replay depth when coherence finds
+    # an object with no valid replica anywhere (evicted-and-lost). 0
+    # disables the lineage ledger entirely.
+    lineage_depth: int = 4
+    # task_retries: relaunch budget for a task whose kernel launch raised
+    # (injected kernel faults, transient device errors) before the error
+    # surfaces on the task future / strict barrier
+    task_retries: int = 0
 
 
 class Runtime:
@@ -209,7 +233,16 @@ class Runtime:
                        "bytes_d2d": 0, "prefetch_hits": 0,
                        "prefetch_misses": 0, "prefetch_stalls": 0,
                        "graphs_traced": 0, "graph_replays": 0,
-                       "graph_invalidations": 0, "replayed_tasks": 0}
+                       "graph_invalidations": 0, "replayed_tasks": 0,
+                       "lineage_recomputes": 0, "recompute_depth_peak": 0,
+                       "task_retries": 0, "tasks_failed": 0}
+        # lineage ledger: producer records for lost-replica recovery
+        self.lineage: Optional[LineageLedger] = (
+            LineageLedger() if self.cfg.lineage_depth > 0 else None)
+        self._lineage_lock = threading.RLock()
+        self._recovering: set = set()       # cycle guard (object ids)
+        self._failed_tasks: List[BaseException] = []
+        self._inject_task_faults = 0        # FaultInjector.fail_task budget
         self._threads: List[threading.Thread] = []
         # unified progress engine (core/progress.py): one reactor owns
         # every asynchronous context this runtime needs — per-device
@@ -268,6 +301,7 @@ class Runtime:
             for sp in list(obj.copies):
                 self._drop_copy(obj, sp)
             obj.copies[device_id] = dev_array
+            obj.generation += 1     # externally-written version
             self.residency.record(device_id, obj)
 
     def pick_landing_device(self, preferred: Optional[int] = None,
@@ -379,6 +413,13 @@ class Runtime:
         # strict mode: a swallowed fire-and-forget progress error fails
         # the barrier instead of leaving a silently-dead continuation
         self.engine.check()
+        if self.cfg.strict_errors:
+            with self._lock:
+                failed, self._failed_tasks = self._failed_tasks, []
+            if failed:
+                raise RuntimeError(
+                    f"{len(failed)} task(s) failed since last barrier: "
+                    f"{failed[0]!r}") from failed[0]
 
     def stats(self) -> Dict[str, Any]:
         s = dict(self._stats)
@@ -428,7 +469,10 @@ class Runtime:
                     obj._pooled_host = False
                 obj.host_pins += 1
                 if write:
-                    # invalidate device copies: host becomes the only valid one
+                    # invalidate device copies: host becomes the only valid
+                    # one — a new generation (stale lineage records must
+                    # not be able to resurrect the pre-write bytes)
+                    obj.generation += 1
                     for sp in [s for s in obj.copies if s != HOST]:
                         self._drop_copy(obj, sp)
             fut.set_result(arr)
@@ -535,6 +579,14 @@ class Runtime:
             if HOST in obj.copies:
                 return obj.copies[HOST]
             src = next(iter(obj.copies), None)
+        if src is None and self.lineage is not None:
+            # no valid replica anywhere: before conjuring zeros, try to
+            # replay the recorded producer chain (bounded, cycle-safe)
+            if self._lineage_recover(obj):
+                with obj.lock:
+                    if HOST in obj.copies:
+                        return obj.copies[HOST]
+                    src = next(iter(obj.copies), None)
         if src is None:
             arr = self.staging.acquire(obj.shape, obj.dtype)
             arr[...] = 0
@@ -618,6 +670,92 @@ class Runtime:
         for buf in bufs:
             self.staging.release(buf)
         return jnp.concatenate(pieces, axis=0)
+
+    # -- lineage-based recovery ----------------------------------------
+    def _lineage_recover(self, obj: HeteroObject,
+                         depth: Optional[int] = None) -> bool:
+        """Rebuild a lost object by replaying its recorded producer task.
+
+        Bounded by ``cfg.lineage_depth`` and cycle-safe: a record is only
+        replayable when every input it *read* still sits at the exact
+        generation it read (in-place ``rw`` chains therefore refuse to
+        replay past their own overwrite), and a per-object guard set
+        breaks any residual recursion. Serialised under one recursive
+        lock so concurrent coherence walks don't double-recompute."""
+        if self.lineage is None:
+            return False
+        if depth is None:
+            depth = self.cfg.lineage_depth
+        if depth <= 0:
+            return False
+        with self._lineage_lock:
+            return self._lineage_recover_locked(obj, depth)
+
+    def _lineage_recover_locked(self, obj: HeteroObject, depth: int) -> bool:
+        with obj.lock:
+            if obj.copies:
+                return True          # raced: already restored
+        if id(obj) in self._recovering:
+            return False             # cycle guard
+        rec = self.lineage.producer(obj)
+        if rec is None:
+            return False
+        self._recovering.add(id(obj))
+        try:
+            for iobj, pre_gen, reads, _writes in rec.args:
+                if not reads:
+                    continue         # pure write: placeholder below
+                if iobj.generation != pre_gen:
+                    return False     # input moved on: chain broken
+                with iobj.lock:
+                    have = bool(iobj.copies)
+                if not have and (depth <= 1 or not
+                                 self._lineage_recover_locked(iobj,
+                                                              depth - 1)):
+                    return False
+            dev = rec.device_id if 0 <= rec.device_id < len(self.devices) \
+                else self.pick_landing_device()
+            device = self._device(dev)
+            dev_args = []
+            for iobj, _pre, reads, _writes in rec.args:
+                if reads:
+                    dev_args.append(self._ensure_on_device(iobj, dev,
+                                                           will_write=False))
+                else:
+                    # write-only slot: content never read by the kernel,
+                    # any correctly-shaped array will do (and avoids
+                    # recursing into the object we are recovering)
+                    dev_args.append(device.upload(
+                        np.zeros(iobj.shape, iobj.dtype)))
+            handle = device.launch(rec.kernel, tuple(dev_args), donate=())
+            device.synchronize(handle)
+            outs = handle if isinstance(handle, (tuple, list)) else (handle,)
+            wi = 0
+            for oobj, _pre, _reads, writes in rec.args:
+                if not writes:
+                    continue
+                if wi < len(outs):
+                    new_arr = outs[wi]
+                    self.residency.ensure_capacity(dev, oobj.nbytes,
+                                                   self._evict)
+                    with oobj.lock:
+                        restore = (oobj is obj) or (
+                            not oobj.copies and self.lineage.producer(oobj)
+                            is rec)
+                        if restore and dev not in oobj.copies:
+                            # restoring the SAME logical version: do NOT
+                            # bump the generation
+                            oobj.copies[dev] = new_arr
+                            self.residency.record(dev, oobj)
+                wi += 1
+            self._stats["lineage_recomputes"] += 1
+            used = self.cfg.lineage_depth - depth + 1
+            if used > self._stats["recompute_depth_peak"]:
+                self._stats["recompute_depth_peak"] = used
+            with obj.lock:
+                return bool(obj.copies)
+        finally:
+            self._recovering.discard(id(obj))
 
     def _evict(self, obj: HeteroObject, device_id: int) -> bool:
         """LRU eviction callback: spill to host unless pinned (paper
@@ -830,6 +968,21 @@ class Runtime:
             try:
                 handle = self._launch(task, dev, pmap)
             except BaseException as e:
+                # bounded relaunch (cfg.task_retries) before the error
+                # surfaces: injected kernel faults / transient device
+                # errors retry with pins intact — _finish unpins exactly
+                # once at the final retirement
+                attempts = getattr(task, "attempts", 0)
+                if attempts < self.cfg.task_retries and not self._shutdown:
+                    task.attempts = attempts + 1
+                    with self._lock:
+                        self._stats["task_retries"] += 1
+                        self.scheduler.load[dev] -= 1
+                        task.state = TaskState.READY
+                        task.chosen_device = None
+                        self.scheduler.push(task)
+                        self._work.notify_all()
+                    continue
                 self._finish(task, error=e)
                 continue
             # pipeline: claim the next prefetch_depth tasks + start their
@@ -861,6 +1014,10 @@ class Runtime:
         staged: Dict[int, Any] = {}
         needed: frozenset = frozenset()
         overlapped = False
+        # argument versions at launch time — the lineage record must pin
+        # inputs to the generations this launch actually read
+        pre_gens = [ref.obj.generation for ref in task.args] \
+            if self.lineage is not None else None
         if prefetched is not None:
             # transfers were issued when the task was assigned; when they
             # completed during the previous task's compute the copy was
@@ -891,6 +1048,13 @@ class Runtime:
             if (ref.access.writes and self.cfg.cache_jit
                     and ref.obj.device_pins == 0):
                 donate.append(i)
+        if self._inject_task_faults > 0:
+            # FaultInjector.fail_task planted a deterministic kernel fault
+            with self._lock:
+                if self._inject_task_faults > 0:
+                    self._inject_task_faults -= 1
+                    raise InjectedTaskFault(
+                        f"injected kernel fault (task {task.name!r})")
         handle = self._device(device_id).launch(
             task.kernel, tuple(dev_args), donate=tuple(donate))
         # bind outputs back onto the written hetero_objects
@@ -904,8 +1068,23 @@ class Runtime:
                         for sp in list(ref.obj.copies):
                             self._drop_copy(ref.obj, sp)
                         ref.obj.copies[device_id] = new_arr
+                        # every write-rebind is a new generation: lineage
+                        # records are valid for exactly one version
+                        ref.obj.generation += 1
                         self.residency.record(device_id, ref.obj)
                 wi += 1
+        if self.lineage is not None and wi:
+            seen_w: set = set()
+            out_gens = {}
+            for ref in task.args:
+                if ref.access.writes and id(ref.obj) not in seen_w:
+                    seen_w.add(id(ref.obj))
+                    out_gens[id(ref.obj)] = ref.obj.generation
+            self.lineage.record(
+                task.kernel,
+                [(ref.obj, g, ref.access.reads, ref.access.writes)
+                 for ref, g in zip(task.args, pre_gens)],
+                out_gens, device_id)
         return handle
 
     def _finish(self, task: HeteroTask, result=None, error=None):
@@ -914,6 +1093,9 @@ class Runtime:
         with self._lock:
             if error is not None:
                 task.state = TaskState.FAILED
+                self._stats["tasks_failed"] += 1
+                if self.cfg.strict_errors and len(self._failed_tasks) < 64:
+                    self._failed_tasks.append(error)
             else:
                 task.state = TaskState.DONE
             if task.chosen_device is not None:

@@ -399,14 +399,22 @@ class GraphTracer:
                 for s, arr in zip(ch.out_slots, outs):
                     env[s] = (ch.device, arr)
             # rebind written objects once, exactly like _launch does:
-            # drop every old copy, the chain output becomes the only one
+            # drop every old copy, the chain output becomes the only one.
+            # Each rebind is a new generation; fused-chain outputs have no
+            # per-task lineage record, so drop any stale one — a lost
+            # replayed object is NOT lineage-recoverable (documented in
+            # the recovery taxonomy), but the generation bump alone
+            # already makes stale records unreplayable.
             for s, (dev, arr) in env.items():
                 obj = g.objects[s]
                 with obj.lock:
                     for sp in list(obj.copies):
                         rt._drop_copy(obj, sp)
                     obj.copies[dev] = arr
+                    obj.generation += 1
                     rt.residency.record(dev, obj)
+                if rt.lineage is not None:
+                    rt.lineage.forget(obj)
         except BaseException as e:
             self._retire_parked(parked, error=e)
             self._invalidate_locked()

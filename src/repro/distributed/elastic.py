@@ -169,8 +169,11 @@ class ElasticRuntime:
     ``owner`` maps chunk oid → rank; ``key_fn(oid)`` names the chunk in
     each rank's object registry; ``restore_fn(oid)`` produces the chunk's
     last committed bytes (checkpoint read) when no surviving replica
-    exists. ``poll()`` is the whole loop body — callable inline for
-    deterministic tests, or from the background monitor (``start()``).
+    exists, and ``recompute_fn(oid)`` is the last line of defence when
+    the checkpoint read itself fails (corrupted/missing leaf) — e.g. a
+    lineage replay or an application-level recompute. ``poll()`` is the
+    whole loop body — callable inline for deterministic tests, or from
+    the background monitor (``start()``).
 
     World changes (``recover``/``drain``/``grow``) run under ``_lock``,
     finish all data movement (``quiesce``) and only then bump ``epoch`` —
@@ -180,6 +183,7 @@ class ElasticRuntime:
     def __init__(self, cluster, owner: OwnerMap, *,
                  key_fn: Optional[Callable[[int], Any]] = None,
                  restore_fn: Optional[Callable[[int], np.ndarray]] = None,
+                 recompute_fn: Optional[Callable[[int], np.ndarray]] = None,
                  chunk_load: Optional[Dict[int, float]] = None,
                  clock: Callable[[], float] = time.monotonic,
                  monitor: int = 0,
@@ -193,6 +197,7 @@ class ElasticRuntime:
         self.owner = owner
         self.key_fn = key_fn or (lambda oid: ("chunk", oid))
         self.restore_fn = restore_fn
+        self.recompute_fn = recompute_fn
         self.chunk_load = chunk_load
         self.clock = clock
         self.monitor = monitor
@@ -219,6 +224,7 @@ class ElasticRuntime:
             "chunks_migrated": 0, "bytes_migrated": 0,
             "recovery_stall_s": 0.0, "dead": [], "stragglers": [],
             "straggler_signals": {}, "poll_errors": 0,
+            "restore_fallbacks": 0,
         }
         cluster._elastic = self
         for r in cluster.ranks:
@@ -361,6 +367,10 @@ class ElasticRuntime:
         self.epoch += 1
         for r in self.cluster.ranks:
             r.runtime.invalidate_traces()
+            if r.runtime.lineage is not None:
+                # records stay (generation checks keep them safe); new
+                # ones carry the new epoch for forensics
+                r.runtime.lineage.bump_epoch()
 
     def _alive_ranks(self, exclude: Sequence[int] = ()) -> List[Any]:
         alive = set(self.controller.alive_workers()) - set(exclude)
@@ -403,14 +413,29 @@ class ElasticRuntime:
                     if replica.rank != new:
                         self._migrate(replica, new, key,
                                       replica.objects[key], oid)
-                elif self.restore_fn is not None:
-                    arr = np.asarray(self.restore_fn(oid))
-                    obj = mon.runtime.hetero_object(arr)
-                    self._migrate(mon, new, key, obj, oid, drop_src=False)
-                else:
+                    continue
+                # no surviving replica: checkpoint first, then lineage
+                # recompute (the checkpoint itself may be corrupted or
+                # missing — integrity validation raises rather than
+                # restoring garbage), then give up loudly
+                arr = None
+                restore_err: Optional[BaseException] = None
+                if self.restore_fn is not None:
+                    try:
+                        arr = np.asarray(self.restore_fn(oid))
+                    except Exception as e:
+                        restore_err = e
+                if arr is None and self.recompute_fn is not None:
+                    arr = np.asarray(self.recompute_fn(oid))
+                    self.stats["restore_fallbacks"] += 1
+                if arr is None:
                     raise RuntimeError(
                         f"chunk {oid} lost with rank {old}: no surviving "
-                        "replica and no restore_fn (checkpoint) configured")
+                        "replica, no restorable checkpoint "
+                        f"({restore_err!r}), and no recompute_fn "
+                        "configured") from restore_err
+                obj = mon.runtime.hetero_object(arr)
+                self._migrate(mon, new, key, obj, oid, drop_src=False)
             self.quiesce()
             stall = self.clock() - t0
             mon.stats["recovery_stall_s"] += stall

@@ -77,6 +77,8 @@ from __future__ import annotations
 import collections
 import dataclasses
 import itertools
+import json
+import os
 import queue
 import random
 import threading
@@ -89,6 +91,7 @@ from repro.core import HeteroObject, Runtime, RuntimeConfig
 from repro.core.device_api import transfer as d2d_transfer
 from repro.core.futures import HFuture
 from repro.core.hetero_object import HOST
+from repro.core.integrity import digest_array
 from repro.core.progress import ProgressEngine
 from repro.core.topology import InterconnectModel
 from repro.distributed import handlers as H
@@ -191,6 +194,13 @@ class Message:
     ack_req: bool = False
     # 'nack' only: chunk seqs the receiver is still missing mid-stream
     missing: Optional[Tuple[int, ...]] = None
+    # -- end-to-end integrity --
+    # content digest of the payload/inline/chunk bytes, computed once at
+    # serialization (host-visible bytes only; DIRECT device arrays are
+    # in-process immutable references and carry None). Verified on every
+    # receive under cfg.verify_payloads: a mismatch is treated as
+    # never-arrived and the reliability layer retransmits.
+    digest: Optional[int] = None
 
 
 class Rank:
@@ -277,7 +287,12 @@ class Rank:
                       # migration, and the cumulative recovery stall
                       "retries": 0, "dup_dropped": 0, "send_failures": 0,
                       "heartbeats_out": 0, "heartbeats_missed": 0,
-                      "chunks_migrated": 0, "recovery_stall_s": 0.0}
+                      "chunks_migrated": 0, "recovery_stall_s": 0.0,
+                      # -- end-to-end integrity --
+                      # payload/inline/chunk digest mismatches detected
+                      # (each treated as never-arrived → retransmitted),
+                      # and the subset that were rendezvous chunks
+                      "checksum_fail": 0, "chunks_rejected": 0}
         # bounded trace of swallowed pump-handler errors (strict mode
         # re-raises the first at the next Cluster.barrier)
         self._errors: List[BaseException] = []
@@ -406,7 +421,8 @@ class Rank:
             msg = Message(msg_id=next(_msg_ids), kind="put", src=self.rank,
                           dst=dst, object_key=object_key, payload=arr,
                           handler=on_done, path=used_path,
-                          consumer_device=consumer_device)
+                          consumer_device=consumer_device,
+                          digest=self._digest_for(arr))
             if self._reliability:
                 msg.ack_req = True
                 self._track_unacked([msg])
@@ -457,6 +473,33 @@ class Rank:
             else self.runtime.cfg.heartbeat_interval_s
         self._hb_dst = monitor
         self._hb_next = 0.0
+
+    # -- end-to-end integrity (content digests at every boundary) ------
+    def _digest_for(self, data: Any) -> Optional[int]:
+        """Sender-side content digest, computed ONCE at serialization for
+        host-visible bytes (np payloads, inline bytes, chunk views).
+        DIRECT device-array payloads carry None: they cross the
+        in-process 'wire' as immutable jax references — there are no wire
+        bytes to flip, and hashing them would force a device→host
+        readback on the zero-copy path."""
+        if not self.runtime.cfg.verify_payloads:
+            return None
+        if isinstance(data, (np.ndarray, bytes, bytearray, memoryview)):
+            return digest_array(data)
+        return None
+
+    def _verify(self, msg: Message, data: Any) -> bool:
+        """Receiver-side digest check. False means the bytes are to be
+        treated as NEVER-ARRIVED — the caller drops them without acking
+        or recording progress, and the reliability layer's retransmission
+        (or the stalled-stream NACK) brings the clean bytes back, so
+        corruption surfaces as a retry, never a hang or a wrong answer."""
+        if msg.digest is None or not self.runtime.cfg.verify_payloads:
+            return True
+        if digest_array(data) == msg.digest:
+            return True
+        self.stats["checksum_fail"] += 1
+        return False
 
     # -- reliability layer (retry / ack / nack; fault-injection mode) ---
     def _track_unacked(self, msgs: List[Message]) -> None:
@@ -559,10 +602,12 @@ class Rank:
             meta, flat, elems = st["meta"], st["flat"], st["elems"]
             k = meta.nchunks - 1
             self.stats["retries"] += 1
+            piece = flat[k * elems:(k + 1) * elems]
             self.cluster.deliver(Message(
                 msg_id=mid, kind="chunk", src=self.rank, dst=meta.dst,
                 seq=k, offset=k * elems, nchunks=meta.nchunks,
-                payload=flat[k * elems:(k + 1) * elems], path=meta.path))
+                payload=piece, path=meta.path,
+                digest=self._digest_for(piece)))
 
     def _nack_stalled_streams(self, now: float) -> None:
         """Receiver-side loss recovery: an incomplete incoming stream
@@ -619,11 +664,12 @@ class Rank:
                 continue
             self.stats["retries"] += 1
             self.stats["chunks_out"] += 1
+            piece = flat[k * elems:(k + 1) * elems]
             self.cluster.deliver(Message(
                 msg_id=msg.msg_id, kind="chunk", src=self.rank,
                 dst=meta.dst, seq=k, offset=k * elems,
-                nchunks=meta.nchunks,
-                payload=flat[k * elems:(k + 1) * elems], path=meta.path))
+                nchunks=meta.nchunks, payload=piece, path=meta.path,
+                digest=self._digest_for(piece)))
         if fresh and st is not None:
             self._advance_stream(msg.msg_id, fresh, window=msg.window,
                                  acked=msg.acked)
@@ -732,13 +778,15 @@ class Rank:
                 meta.ack_req = True
             if meta.path != "direct" and nbytes <= INLINE_PAYLOAD_BYTES:
                 meta.inline = np.asarray(arr).tobytes()  # §4.2.3 small msgs
+                meta.digest = self._digest_for(meta.inline)
                 if self._reliability:
                     self._track_unacked([meta])
                 self.cluster.deliver(meta)
             else:
                 payload = Message(msg_id=meta.msg_id, kind="payload",
                                   src=self.rank, dst=meta.dst, payload=arr,
-                                  path=meta.path)
+                                  path=meta.path,
+                                  digest=self._digest_for(arr))
                 if self._reliability:
                     # meta+payload retransmit as a unit: whichever half
                     # was dropped, the receiver's pairing logic re-pairs
@@ -832,7 +880,8 @@ class Rank:
             chunk = Message(msg_id=msg_id, kind="chunk", src=self.rank,
                             dst=meta.dst, seq=k, offset=k * elems,
                             nchunks=meta.nchunks, payload=piece,
-                            path=meta.path)
+                            path=meta.path,
+                            digest=self._digest_for(piece))
             state["credits"] -= 1
             state["next_seq"] = k + 1
             self.stats["chunks_out"] += 1
@@ -1019,6 +1068,12 @@ class Rank:
         if msg.seq in state["uploads"]:
             self.stats["dup_dropped"] += 1   # duplicated/replayed chunk
             return
+        if not self._verify(msg, msg.payload):
+            # corrupted chunk = never arrived: no progress stamp, no
+            # upload entry — the stalled-stream NACK re-requests exactly
+            # this seq and the sender replays it from the parked payload
+            self.stats["chunks_rejected"] += 1
+            return
         state["last_progress"] = time.perf_counter()
         rt, dev = self.runtime, state["dev"]
         payload, offset = msg.payload, msg.offset
@@ -1148,6 +1203,8 @@ class Rank:
             elif msg.protocol == "rdzv":
                 self._prepare_rendezvous(msg)
             elif msg.inline is not None:
+                if not self._verify(msg, msg.inline):
+                    return      # never-arrived: no ack → sender retries
                 arr = np.frombuffer(msg.inline, dtype=msg.payload_dtype
                                     ).reshape(msg.payload_shape).copy()
                 obj = self.runtime.hetero_object(arr)
@@ -1179,6 +1236,11 @@ class Rank:
             self._rdzv_sent.pop(msg.msg_id, None)
             self._ack_unacked(msg.msg_id)
         elif msg.kind == "payload":
+            if not self._verify(msg, msg.payload):
+                # never-arrived: its meta half (parked here or still in
+                # flight) stays pending; the unacked meta+payload unit
+                # retransmits and the clean payload re-pairs
+                return
             meta = self._pending_meta.pop(msg.msg_id, None)
             if meta is None:       # payload raced ahead of metadata
                 self._pending_meta[msg.msg_id] = msg
@@ -1187,6 +1249,8 @@ class Rank:
             self._invoke(meta, obj)
             self._mark_done(meta)
         elif msg.kind == "put":
+            if not self._verify(msg, msg.payload):
+                return      # never-arrived: no ack → sender retries
             self.stats["received"] += 1
             target = self.objects.get(msg.object_key)
             if target is not None:
@@ -1306,8 +1370,9 @@ class Rank:
 
     # -- rendezvous-state hygiene (peer loss / shutdown) ---------------
     def state_gauges(self) -> Dict[str, int]:
-        """Leak gauges: live rendezvous/protocol state entries. All zero
-        once every stream completed or was swept."""
+        """Leak gauges: live rendezvous/protocol state entries — all zero
+        once every stream completed or was swept — plus the cumulative
+        integrity counters (zero on a clean, uncorrupted link)."""
         with self._unacked_lock:
             unacked = len(self._unacked)
         return {"rdzv_out": len(self._rdzv_out),
@@ -1315,7 +1380,9 @@ class Rank:
                 "rdzv_bufs": len(self._rdzv_bufs),
                 "pending_meta": len(self._pending_meta),
                 "rdzv_sent": len(self._rdzv_sent),
-                "unacked": unacked}
+                "unacked": unacked,
+                "checksum_fail": self.stats["checksum_fail"],
+                "chunks_rejected": self.stats["chunks_rejected"]}
 
     def _sweep_out_streams(self, peer: Optional[int] = None
                            ) -> Dict[str, int]:
@@ -1428,9 +1495,18 @@ class FaultInjector:
       delayed by the remaining freeze time (and observed into the
       ``InterconnectModel`` as latency samples, which is precisely the
       EWMA signal straggler detection reads). The rank keeps computing.
-    - ``set_link``: per-directed-link loss/duplication/extra delay, each
-      applied per message from a seeded RNG — deterministic for a fixed
-      seed and delivery order.
+    - ``set_link``: per-directed-link loss/duplication/extra delay/
+      bit-flip corruption, each applied per message from a seeded RNG —
+      deterministic for a fixed seed and delivery order. Corruption
+      flips one bit in a COPY of the payload/inline bytes (the sender's
+      retained buffers stay pristine, so the reliability layer's
+      retransmission carries the clean bytes).
+    - ``corrupt_checkpoint_leaf``: flip one seeded bit in a committed
+      checkpoint leaf's ``.npy`` data section on disk — the silent
+      storage-corruption case ``Checkpointer`` digests guard against.
+    - ``fail_task``: plant deterministic kernel faults in a rank's local
+      Runtime — the next ``times`` launches raise ``InjectedTaskFault``
+      (retried up to ``RuntimeConfig.task_retries``, then surfaced).
 
     All decisions come from one seeded ``random.Random`` under a lock;
     ``stats`` counts every injected event."""
@@ -1443,7 +1519,8 @@ class FaultInjector:
         self.frozen: Dict[int, float] = {}     # rank -> thaw instant
         self.links: Dict[Tuple[int, int], Dict[str, float]] = {}
         self.stats = {"dropped": 0, "duplicated": 0, "delayed": 0,
-                      "kills": 0, "freezes": 0}
+                      "kills": 0, "freezes": 0, "corrupted": 0,
+                      "ckpt_corrupted": 0, "task_faults": 0}
 
     # -- fault controls -------------------------------------------------
     def kill_rank(self, rank: int) -> None:
@@ -1477,12 +1554,15 @@ class FaultInjector:
         return remaining
 
     def set_link(self, src: int, dst: int, drop: float = 0.0,
-                 dup: float = 0.0, delay_s: float = 0.0) -> None:
+                 dup: float = 0.0, delay_s: float = 0.0,
+                 corrupt: float = 0.0) -> None:
         """Per-directed-link fault profile: each message (src → dst) is
-        dropped with probability ``drop``, duplicated with ``dup``, and
-        delayed an extra ``delay_s``."""
+        dropped with probability ``drop``, duplicated with ``dup``,
+        delayed an extra ``delay_s``, and — for messages carrying
+        host-visible payload bytes — bit-flipped with probability
+        ``corrupt``."""
         self.links[(src, dst)] = {"drop": drop, "dup": dup,
-                                  "delay_s": delay_s}
+                                  "delay_s": delay_s, "corrupt": corrupt}
 
     def clear_link(self, src: int, dst: int) -> None:
         self.links.pop((src, dst), None)
@@ -1510,6 +1590,75 @@ class FaultInjector:
             if delay > 0:
                 self.stats["delayed"] += 1
             return False, delay, dup
+
+    # -- corruption -----------------------------------------------------
+    def maybe_corrupt(self, msg: Message) -> Message:
+        """Bit-flip decision for one message: returns either ``msg``
+        untouched or a shallow copy whose payload/inline bytes have one
+        seeded bit flipped.
+
+        The copy is essential: the sender retains the *original*
+        ``Message`` objects for ack-timeout retransmission and tail
+        resends, so mutating in place would poison every retry. Only
+        host-visible bytes (np.ndarray / bytes) are candidates — DIRECT
+        device arrays are immutable in-process references a wire flip
+        cannot reach (and hashing them would force a readback)."""
+        with self._lock:
+            link = self.links.get((msg.src, msg.dst))
+            if (link is None or not link.get("corrupt")
+                    or self.rng.random() >= link["corrupt"]):
+                return msg
+            if msg.inline is not None and len(msg.inline) > 0:
+                buf = bytearray(msg.inline)
+                bit = self.rng.randrange(len(buf) * 8)
+                buf[bit >> 3] ^= 1 << (bit & 7)
+                self.stats["corrupted"] += 1
+                return dataclasses.replace(msg, inline=bytes(buf))
+            pay = msg.payload
+            if isinstance(pay, np.ndarray) and pay.nbytes > 0:
+                flipped = np.array(pay, copy=True)
+                flat = flipped.reshape(-1).view(np.uint8)
+                bit = self.rng.randrange(flat.size * 8)
+                flat[bit >> 3] ^= 1 << (bit & 7)
+                self.stats["corrupted"] += 1
+                return dataclasses.replace(msg, payload=flipped)
+            return msg
+
+    def corrupt_checkpoint_leaf(self, directory: str, step: int,
+                                key: str) -> None:
+        """Flip one seeded bit in the data section of a committed
+        checkpoint leaf's ``.npy`` file — silent storage corruption, the
+        case the manifest digests exist to catch. The npy header is left
+        intact (np.load must still parse shape/dtype) by locating the
+        data section from the end of the file: ``offset = size − nbytes``
+        computed from the manifest's own shape/dtype entry."""
+        step_dir = os.path.join(directory, f"step_{step}")
+        with open(os.path.join(step_dir, "manifest.json")) as f:
+            manifest = json.load(f)
+        entry = manifest["leaves"][key]
+        nbytes = int(np.prod(entry["shape"], dtype=np.int64) *
+                     np.dtype(entry["dtype"]).itemsize)
+        path = os.path.join(step_dir, entry["file"])
+        size = os.path.getsize(path)
+        with self._lock:
+            bit = self.rng.randrange(max(1, nbytes) * 8)
+            self.stats["ckpt_corrupted"] += 1
+        with open(path, "r+b") as f:
+            f.seek((size - nbytes) + (bit >> 3))
+            b = f.read(1)
+            f.seek(-1, os.SEEK_CUR)
+            f.write(bytes([b[0] ^ (1 << (bit & 7))]))
+
+    def fail_task(self, rank: int, times: int = 1) -> None:
+        """Plant ``times`` kernel faults in ``rank``'s local Runtime: the
+        next ``times`` task launches there raise ``InjectedTaskFault``
+        from inside ``_launch``, exercising retry (``task_retries``) and
+        strict-error surfacing through the production failure path."""
+        rt = self.cluster.ranks[rank].runtime
+        with rt._lock:
+            rt._inject_task_faults += times
+        with self._lock:
+            self.stats["task_faults"] += times
 
 
 @dataclasses.dataclass
@@ -1688,6 +1837,10 @@ class Cluster:
             drop, extra, dup = fi.intercept(msg)
             if drop:
                 return
+            # one corruption decision per wire crossing; a duplicate
+            # carries the same (possibly flipped) bytes — dedup and
+            # checksum verification both see what the wire produced
+            msg = fi.maybe_corrupt(msg)
             if dup:
                 self._transmit(msg)
             if extra > 0:
