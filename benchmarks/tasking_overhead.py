@@ -74,7 +74,7 @@ LADDER_BY_NAME = dict(LADDER)
 # rungs with their own workload/measurement, appended after the ladder
 EXTRA_RUNGS = ["SCHED-Locality", "MSG-Pipeline", "MSG-HOL",
                "MSG-Congestion", "ELASTIC-Recover", "INTEG-Recover",
-               "TASK-Replay"]
+               "TASK-Replay", "COLL-Allreduce"]
 
 # subset of Runtime.stats() recorded per rung in the JSON report
 _REPORT_KEYS = ("staging_hits", "staging_misses", "request_pool_hits",
@@ -182,6 +182,16 @@ def bench_elastic_recover(iters: int = 6) -> Dict:
     the unfaulted elastic run bit-for-bit — no restart, bounded stall."""
     import elastic_recover   # benchmarks/ is on sys.path as a script
     return elastic_recover.run_recover(iters=max(iters, 4))
+
+
+def bench_coll_allreduce(iters: int = 25) -> Dict:
+    """COLL-Allreduce rung: topology-aware runtime collectives — the
+    pipelined chunked-ring allreduce vs the naive sequential send-to-
+    root-and-scatter baseline on large payloads, the eager binomial-tree
+    arm on small ones, bit-determinism against the numpy oracle, and a
+    kill-rank-mid-collective abort/retry."""
+    import coll_allreduce   # benchmarks/ is on sys.path as a script
+    return coll_allreduce.run_coll(iters_small=max(iters, 10))
 
 
 def bench_integ_recover(iters: int = 6) -> Dict:
@@ -466,6 +476,27 @@ def main(argv=None):
         print(f"figTG_TASK-Replay_summary,,"
               f"bitwise{int(row['bitwise_identical'])}_"
               f"tasks{row['replayed_tasks']}")
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(row, f, indent=2)
+        return
+    if args.only == "COLL-Allreduce":
+        row = bench_coll_allreduce(iters=max(args.iters // 3, 10))
+        lg, sm, kl = row["large"], row["small"], row["kill"]
+        print(f"figCOLL_COLL-Allreduce_large_naive_{row['large_bytes']},"
+              f"{lg['naive_ms'] * 1e3:.1f},")
+        print(f"figCOLL_COLL-Allreduce_large_ring_{row['large_bytes']},"
+              f"{lg['ring_ms'] * 1e3:.1f},x{lg['speedup']:.3f}")
+        print(f"figCOLL_COLL-Allreduce_small_tree_{row['small_bytes']},"
+              f"{sm['tree_us']:.1f},"
+              f"overhead{sm['overhead_pct']:+.2f}pct")
+        print(f"figCOLL_COLL-Allreduce_kill,,"
+              f"kills{kl['kills']}_aborts{kl['aborts']}_"
+              f"recovered{int(kl['recovered'])}")
+        print(f"figCOLL_COLL-Allreduce_summary,,"
+              f"x{lg['speedup']:.3f}_"
+              f"bitwise{int(row['bitwise_identical'])}_"
+              f"ring{len(row['shape']['ring'])}")
         if args.json:
             with open(args.json, "w") as f:
                 json.dump(row, f, indent=2)

@@ -195,7 +195,9 @@ def _slab_bounds(n: int, parts: int) -> List[Tuple[int, int]]:
     return [(p * n // parts, (p + 1) * n // parts) for p in range(parts)]
 
 
-def run_cluster(u0: np.ndarray, iters: int, cluster) -> np.ndarray:
+def run_cluster(u0: np.ndarray, iters: int, cluster, *,
+                residual_every: int = 0,
+                residuals: Optional[list] = None) -> np.ndarray:
     """Distributed Jacobi over ``cluster``'s ranks: axis-0 slab
     decomposition, scatter/gather through ``Rank.send`` (credit-windowed
     rendezvous streams for slabs above the eager threshold — big slabs
@@ -203,7 +205,13 @@ def run_cluster(u0: np.ndarray, iters: int, cluster) -> np.ndarray:
     halo planes through DIRECT ``Rank.put`` into preregistered halo
     objects (the freshly-extracted face already lives on a device, so the
     plane travels device-to-device; oversized planes would chunk-stream
-    through the same rendezvous path)."""
+    through the same rendezvous path).
+
+    ``residual_every=k`` computes the global update-residual norm
+    ``||u_new - u_old||_2`` every k iterations through a runtime
+    allreduce of per-rank partial sums (``(iter, norm)`` appended to
+    ``residuals``) — no slab ever travels to rank 0 for it, unlike the
+    final gather."""
     ranks = cluster.ranks
     n = len(ranks)
     bounds = _slab_bounds(u0.shape[0], n)
@@ -248,7 +256,15 @@ def run_cluster(u0: np.ndarray, iters: int, cluster) -> np.ndarray:
     def update(u, l0, h0, z1, z2):
         return stencil_update(u, l0, h0, z1, z1, z2, z2)
 
-    for _ in range(iters):
+    coll = None
+    if residual_every > 0:
+        from repro.distributed.collectives_rt import CollectiveGroup
+        coll = CollectiveGroup(cluster)
+
+    for it in range(iters):
+        res_tick = coll is not None and (it + 1) % residual_every == 0
+        prev = {i: np.array(r._jacobi["slab"].get())
+                for i, r in enumerate(ranks)} if res_tick else None
         for r in ranks:
             r._jacobi["halos"] = 0
             r._jacobi["halo_evt"].clear()
@@ -277,6 +293,17 @@ def run_cluster(u0: np.ndarray, iters: int, cluster) -> np.ndarray:
                             (r.objects["jhi"], "r"), (z1, "r"), (z2, "r")])
         for r in ranks:
             r.runtime.barrier(timeout=120)
+        if res_tick:
+            # per-rank partial ||du||^2, summed by a (tiny, eager-tree)
+            # runtime allreduce — bit-identical on every member
+            parts = [np.array(
+                [np.sum((np.asarray(r._jacobi["slab"].get(),
+                                    dtype=np.float64)
+                         - prev[i]) ** 2)])
+                for i, r in enumerate(ranks)]
+            total = coll.allreduce(parts)[0]
+            if residuals is not None:
+                residuals.append((it + 1, float(np.sqrt(total[0]))))
 
     # gather back to rank 0 through the protocol
     for i in range(1, n):
@@ -607,6 +634,13 @@ def run_cluster_elastic(u0: np.ndarray, iters: int, cluster, *,
                                   for r in ranks),
         "ckpt_verify_fail": ckpt.stats["ckpt_verify_fail"] if ckpt else 0,
         "restore_fallbacks": er.stats["restore_fallbacks"],
+    }
+    report["collectives"] = {
+        "coll_bytes_reduced": sum(
+            r.stats["coll_bytes_reduced"] for r in ranks),
+        "coll_chunks_in_flight_peak": max(
+            r.stats["coll_chunks_in_flight_peak"] for r in ranks),
+        "coll_aborts": sum(r.stats["coll_aborts"] for r in ranks),
     }
     out = np.empty_like(u0)
     for i, (lo, hi) in enumerate(bounds):

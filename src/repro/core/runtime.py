@@ -195,6 +195,22 @@ class RuntimeConfig:
     # (injected kernel faults, transient device errors) before the error
     # surfaces on the task future / strict barrier
     task_retries: int = 0
+    # -- runtime collectives (distributed/collectives_rt.py) --
+    # algorithm cutover: payloads at or below this many bytes run as
+    # eager binomial trees (latency-bound regime), larger ones as
+    # pipelined chunked rings (bandwidth-bound). Matches eager_threshold
+    # by default — below it every ring hop would be an eager message
+    # anyway, so the ring's pipelining buys nothing
+    coll_ring_cutover_bytes: int = 64 << 10
+    # cap on the credit window of op="reduce" rendezvous streams: every
+    # in-flight reduce chunk is a fused add pending on the consumer
+    # device's transfer lane, so this bounds accumulator-side device
+    # work/memory independently of the AIMD ceiling. 0 = uncapped
+    coll_max_inflight_chunks: int = 4
+    # collective tag namespace: tags (which scope every stream and
+    # handler invocation to one collective op) wrap at this size, so at
+    # most this many collectives may be in flight per group at once
+    coll_tag_space: int = 1 << 12
 
 
 class Runtime:

@@ -20,7 +20,7 @@ samples, so tests can drive it deterministically.
 from __future__ import annotations
 
 import threading
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.hetero_object import HOST
 
@@ -261,6 +261,62 @@ class InterconnectModel:
             est = self._links.get((src, dst))
             if est is not None:
                 est.window_choice = None
+
+    # -- collective shape selection (distributed/collectives_rt.py) ----
+    def ring_order(self, members: Sequence[int],
+                   nbytes: int = 1 << 20) -> List[int]:
+        """Topology-aware ring order over ``members`` for chunk-streamed
+        collectives: a greedy nearest-neighbor walk over the EWMA link
+        table, so each ring hop rides the cheapest still-available link
+        out of the current endpoint (predicted ``cost_s`` at ``nbytes``
+        per hop — the bandwidth-phase payload size, since ring
+        collectives are bandwidth-bound). Deterministic: the walk starts
+        at the smallest member id and breaks cost ties by member id, so
+        an unmeasured table (all defaults) degrades to sorted order and
+        two runs over the same estimates choose the same ring — which is
+        what keeps ring-reduction order, and therefore float bits,
+        reproducible."""
+        members = sorted(set(members))
+        if len(members) <= 2:
+            return members
+        with self._lock:
+            def cost(a: int, b: int) -> float:
+                est = self._links.get((a, b))
+                if est is None:
+                    est = LinkEstimate(self._default_bw, self._default_lat)
+                return est.cost_s(nbytes)
+
+            order = [members[0]]
+            rest = set(members[1:])
+            while rest:
+                cur = order[-1]
+                order.append(min(rest, key=lambda c: (cost(cur, c), c)))
+                rest.discard(order[-1])
+        return order
+
+    def tree_order(self, root: int, members: Sequence[int],
+                   nbytes: int = 4 << 10) -> List[int]:
+        """Binomial-tree position order for eager (latency-bound)
+        collectives: ``root`` at position 0, remaining members sorted by
+        predicted (root → member) link cost at the small-message size,
+        ties by member id. Binomial trees put low positions nearest the
+        root and give them the most children, so ranks behind the
+        fastest links carry the widest fan-out while slow links hang off
+        the leaves. Deterministic under equal estimates (sorted order),
+        for the same bit-reproducibility reason as ``ring_order``."""
+        members = sorted(set(members))
+        if root not in members:
+            raise ValueError(f"tree root {root} not in members {members}")
+        rest = [m for m in members if m != root]
+        with self._lock:
+            def cost(m: int) -> float:
+                est = self._links.get((root, m))
+                if est is None:
+                    est = LinkEstimate(self._default_bw, self._default_lat)
+                return est.cost_s(nbytes)
+
+            rest.sort(key=lambda m: (cost(m), m))
+        return [root] + rest
 
     def penalty_bytes(self, src: int, dst: int, seconds: float,
                       lo: int = 64 << 10, hi: int = 1 << 20) -> int:

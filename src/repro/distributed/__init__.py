@@ -1,3 +1,5 @@
+from repro.distributed.collectives_rt import (CollectiveAborted,  # noqa: F401
+                                              CollectiveGroup)
 from repro.distributed.elastic import (ElasticController,  # noqa: F401
                                        ElasticRuntime, WorkerHealth)
 from repro.distributed.handlers import handler, registered, resolve  # noqa: F401

@@ -144,6 +144,30 @@ def _slab_updater():
     return _slab_updater_fn
 
 
+_slab_reducer_fn = None
+
+
+def _slab_reducer():
+    """Jitted donated fused reduce-scatter for op='reduce' rendezvous
+    streams (runtime collectives): read the chunk-sized window of the
+    accumulator slab at the element offset, add the incoming chunk, and
+    write it back in place — the per-hop reduction the pipelined-ring
+    collectives fuse onto the consumer device's transfer lane, so chunk
+    k+1's network receive overlaps chunk k's add. Donation keeps the
+    per-chunk cost chunk-sized, exactly like ``_slab_updater``."""
+    global _slab_reducer_fn
+    if _slab_reducer_fn is None:
+        import jax
+        _slab_reducer_fn = jax.jit(
+            lambda slab, chunk, off:
+            jax.lax.dynamic_update_slice(
+                slab,
+                jax.lax.dynamic_slice(slab, (off,), chunk.shape) + chunk,
+                (off,)),
+            donate_argnums=0)
+    return _slab_reducer_fn
+
+
 @dataclasses.dataclass
 class Message:
     msg_id: int
@@ -168,7 +192,10 @@ class Message:
     protocol: str = "eager"    # 'eager' | 'rdzv'
     op: str = "send"           # what a rendezvous stream completes into:
     #                            'send' (handler invocation) | 'put'
-    #                            (overwrite the keyed target object)
+    #                            (overwrite the keyed target object) |
+    #                            'reduce' (accumulate INTO the keyed
+    #                            target: chunks add into the landing slab
+    #                            instead of rebinding it — collectives)
     seq: Optional[int] = None  # chunk index within a rendezvous stream
     offset: Optional[int] = None   # chunk start, in elements
     nchunks: Optional[int] = None
@@ -292,7 +319,15 @@ class Rank:
                       # payload/inline/chunk digest mismatches detected
                       # (each treated as never-arrived → retransmitted),
                       # and the subset that were rendezvous chunks
-                      "checksum_fail": 0, "chunks_rejected": 0}
+                      "checksum_fail": 0, "chunks_rejected": 0,
+                      # -- runtime collectives (collectives_rt) --
+                      # bytes folded into accumulators on this rank
+                      # (eager adds + fused reduce-stream chunks), the
+                      # deepest op='reduce' chunk pipeline observed, and
+                      # collectives aborted here by an epoch bump
+                      "coll_bytes_reduced": 0,
+                      "coll_chunks_in_flight_peak": 0,
+                      "coll_aborts": 0}
         # bounded trace of swallowed pump-handler errors (strict mode
         # re-raises the first at the next Cluster.barrier)
         self._errors: List[BaseException] = []
@@ -369,7 +404,8 @@ class Rank:
 
     def put(self, dst: int, object_key: Any, data: HeteroObject,
             on_done: Optional[str] = None, path: str = "host",
-            consumer_device: Optional[int] = None) -> HFuture:
+            consumer_device: Optional[int] = None,
+            user: Optional[Dict[str, Any]] = None) -> HFuture:
         """Remote put: overwrite the target's hetero_object (paper §4.2.4:
         reuses existing, pinned target memory — no receiver allocation).
         ``path='direct'`` ships the freshest device copy with no host
@@ -378,7 +414,36 @@ class Rank:
         Payloads above the eager threshold chunk-stream through the same
         credit-windowed rendezvous path as large sends (ROADMAP follow-up
         b) — the stream completes into the target object instead of a
-        handler allocation."""
+        handler allocation. ``user`` rides to the ``on_done`` handler's
+        context (the collectives engine threads hop metadata through it)."""
+        return self._put_like(dst, object_key, data, "put", on_done, path,
+                              consumer_device, user)
+
+    def reduce_into(self, dst: int, object_key: Any, data: HeteroObject,
+                    on_done: Optional[str] = None, path: str = "host",
+                    consumer_device: Optional[int] = None,
+                    user: Optional[Dict[str, Any]] = None) -> HFuture:
+        """Remote accumulate: add this rank's ``data`` INTO the target's
+        keyed hetero_object instead of overwriting it — the collective
+        stream variant of ``put`` (runtime collectives, ISSUE 9). Large
+        payloads ride the same credit-windowed rendezvous path, but the
+        receiver initializes the landing slab from the target's current
+        value and every chunk is a fused chunk-sized add on the landing
+        device's transfer lane (``_slab_reducer``), so chunk k+1's
+        network receive overlaps chunk k's reduction; the finished slab
+        rebinds as the target's only valid copy. Small payloads add on
+        the receiver's host copy. The in-flight chunk window is capped by
+        ``RuntimeConfig.coll_max_inflight_chunks`` on top of the AIMD
+        controller. A ``reduce_into`` against an unregistered key is
+        dropped on the receiver (aborted collective): the stream still
+        completes and acks, nothing is mutated."""
+        return self._put_like(dst, object_key, data, "reduce", on_done,
+                              path, consumer_device, user)
+
+    def _put_like(self, dst: int, object_key: Any, data: HeteroObject,
+                  op: str, on_done: Optional[str], path: str,
+                  consumer_device: Optional[int],
+                  user: Optional[Dict[str, Any]]) -> HFuture:
         fut = HFuture()
         if path == "host" and self._device_resident_small(data):
             path = "direct"          # ROADMAP 5a, same upgrade as send()
@@ -409,9 +474,9 @@ class Rank:
             self.stats[key] += arr.nbytes
             if arr.nbytes > thr:
                 meta = Message(msg_id=next(_msg_ids), kind="meta",
-                               src=self.rank, dst=dst, op="put",
+                               src=self.rank, dst=dst, op=op,
                                object_key=object_key, handler=on_done,
-                               path=used_path,
+                               path=used_path, user=user,
                                consumer_device=consumer_device,
                                payload_shape=tuple(arr.shape),
                                payload_dtype=np.dtype(arr.dtype).str)
@@ -419,9 +484,9 @@ class Rank:
                 fut.set_result(None)
                 return
             msg = Message(msg_id=next(_msg_ids), kind="put", src=self.rank,
-                          dst=dst, object_key=object_key, payload=arr,
-                          handler=on_done, path=used_path,
-                          consumer_device=consumer_device,
+                          dst=dst, op=op, object_key=object_key,
+                          payload=arr, handler=on_done, path=used_path,
+                          user=user, consumer_device=consumer_device,
                           digest=self._digest_for(arr))
             if self._reliability:
                 msg.ack_req = True
@@ -957,6 +1022,11 @@ class Rank:
             window = self.cluster.topology.window_chunks(
                 meta.src, self.rank, chunk_b,
                 queue_depth=rx_queue, slab_bytes=slab_bytes)
+        if meta.op == "reduce" and rt.cfg.coll_max_inflight_chunks:
+            # every in-flight reduce chunk is a pending fused add on the
+            # landing device's transfer lane: cap the pipeline depth so
+            # accumulator-side device work stays bounded (satellite knob)
+            window = min(window, rt.cfg.coll_max_inflight_chunks)
         window = max(1, min(window, meta.nchunks))
         state = {
             "meta": meta,
@@ -964,6 +1034,12 @@ class Rank:
             "uploads": {},           # seq -> (chunk-landed future, nbytes)
             "arrived": 0,
             "slab": None,            # device slab, chained through chunks
+            # op='reduce' only: async device view of the target object —
+            # the accumulator base the first chunk's lane job turns into
+            # the landing slab (requested HERE, resolved off-lane, so the
+            # transfer lane never deadlocks requesting it against itself)
+            "reduce": meta.op == "reduce",
+            "base_fut": None,
             # -- adaptive flow-control state --
             "adaptive": adaptive,
             "chunk_b": chunk_b,
@@ -979,15 +1055,28 @@ class Rank:
         if meta.nchunks > 1 and getattr(device, "jax_device", None) \
                 is not None:
             total = meta.total_bytes // np.dtype(meta.payload_dtype).itemsize
-
-            def init(device=device, total=total,
-                     dtype=meta.payload_dtype):
-                import jax
-                import jax.numpy as jnp
-                with jax.default_device(device.jax_device):
-                    state["slab"] = jnp.zeros(total, dtype=np.dtype(dtype))
-            # FIFO transfer lane: the init lands before any chunk update
-            rt._async_transfer(dev, init)
+            if state["reduce"]:
+                # reduce stream: the slab must START as the target's
+                # current value (the accumulator), not zeros. Request the
+                # view now so it resolves while the CTS round-trips; the
+                # first chunk's lane job materializes it on-device. A
+                # missing target (collective aborted before the stream
+                # opened) leaves base_fut None: chunks fall back to the
+                # parts path and the finish drops the result harmlessly.
+                target = self.objects.get(meta.object_key)
+                if target is not None:
+                    state["base_fut"] = rt._request_device_view(target)
+            else:
+                def init(device=device, total=total,
+                         dtype=meta.payload_dtype):
+                    import jax
+                    import jax.numpy as jnp
+                    with jax.default_device(device.jax_device):
+                        state["slab"] = jnp.zeros(total,
+                                                  dtype=np.dtype(dtype))
+                # FIFO transfer lane: the init lands before any chunk
+                # update
+                rt._async_transfer(dev, init)
         self._rdzv_in[meta.msg_id] = state
         if window < self.stats["window_min"] or not self.stats["window_min"]:
             self.stats["window_min"] = window
@@ -1028,6 +1117,9 @@ class Rank:
         target = self.cluster.topology.window_chunks(
             meta.src, self.rank, state["chunk_b"],
             queue_depth=q, slab_bytes=slab)
+        cap = self.runtime.cfg.coll_max_inflight_chunks
+        if state["reduce"] and cap:
+            target = min(target, cap)   # reduce pipeline stays bounded
         target = max(target, 1)
         if target != state["win"]:
             self.stats["window_adjusts"] += 1
@@ -1082,12 +1174,34 @@ class Rank:
         self.stats[key] += payload.nbytes
 
         def fn():
+            if state["slab"] is None and state["base_fut"] is not None:
+                # first reduce chunk: turn the target's device view into
+                # the accumulator slab, on the landing device. The future
+                # resolves off-lane (task-completion callbacks), so this
+                # wait cannot deadlock the transfer lane against itself.
+                import jax
+                base_fut = state["base_fut"]
+                state["base_fut"] = None
+                space, base = base_fut.get(
+                    timeout=rt.cfg.rdzv_finish_timeout_s)
+                rt.futures.release(base_fut)
+                if space == HOST:
+                    base = np.asarray(base)
+                jdev = rt._device(dev).jax_device
+                state["slab"] = jax.device_put(
+                    base, jdev).reshape(-1).block_until_ready()
             if state["slab"] is not None:
                 # scatter straight into the slab: the jitted update
                 # consumes the (host-view or device) chunk synchronously,
-                # so no alias into the sender's pooled buffer survives
+                # so no alias into the sender's pooled buffer survives.
+                # op='reduce' fuses the add here, on the transfer lane —
+                # the per-hop reduction the ring collectives pipeline.
                 src = payload if direct else np.asarray(payload)
-                slab = _slab_updater()(state["slab"], src, offset)
+                if state["reduce"]:
+                    slab = _slab_reducer()(state["slab"], src, offset)
+                    self.stats["coll_bytes_reduced"] += payload.nbytes
+                else:
+                    slab = _slab_updater()(state["slab"], src, offset)
                 slab.block_until_ready()
                 state["slab"] = slab
                 return None
@@ -1103,6 +1217,12 @@ class Rank:
         state["uploads"][msg.seq] = (fut, payload.nbytes)
         state["arrived"] += 1
         self.stats["chunks_in"] += 1
+        if state["reduce"]:
+            # pipeline-depth telemetry: reduce chunks arrived but not yet
+            # folded into the accumulator (the overlap the cap bounds)
+            inflight = state["arrived"] - state["completed"]
+            if inflight > self.stats["coll_chunks_in_flight_peak"]:
+                self.stats["coll_chunks_in_flight_peak"] = inflight
         if msg.nchunks > 1:
             # the credit decision runs the moment this chunk's device
             # copy retires (fires on the transfer lane — never blocks
@@ -1160,16 +1280,31 @@ class Rank:
             else:   # non-jax Device backends (tests): plain host assembly
                 assembled = np.concatenate([np.asarray(p) for p in parts]) \
                     .reshape(meta.payload_shape)
-            if meta.op == "put":
+            if meta.op in ("put", "reduce"):
                 # rendezvous put (ROADMAP follow-up b): the stream lands
                 # device-resident and becomes the target's only valid
-                # copy — no receiver-side host staging
+                # copy — no receiver-side host staging. For op='reduce'
+                # the slab already IS base + every chunk (the adds were
+                # fused on the transfer lane), so the same rebind
+                # completes the accumulation; without a slab (non-jax
+                # landing, single chunk) the add happens on host here. A
+                # missing target (aborted collective) drops the result.
                 target = self.objects.get(meta.object_key)
                 if target is not None:
-                    if isinstance(assembled, np.ndarray):
-                        assembled = self.runtime._device(dev).upload(
-                            assembled)
-                    self.runtime.rebind_device_copy(target, assembled, dev)
+                    if meta.op == "reduce" and state["slab"] is None:
+                        fut = target.request_host(write=True)
+                        arr = fut.get()
+                        np.add(arr, np.asarray(assembled).reshape(arr.shape),
+                               out=arr, casting="unsafe")
+                        target.release()
+                        self.stats["coll_bytes_reduced"] += \
+                            int(meta.total_bytes or 0)
+                    else:
+                        if isinstance(assembled, np.ndarray):
+                            assembled = self.runtime._device(dev).upload(
+                                assembled)
+                        self.runtime.rebind_device_copy(target, assembled,
+                                                        dev)
                 self._mark_done(meta, ack=False)  # explicit ack follows
                 self.cluster.deliver(Message(msg_id=msg_id, kind="ack",
                                              src=self.rank, dst=meta.src))
@@ -1253,7 +1388,19 @@ class Rank:
                 return      # never-arrived: no ack → sender retries
             self.stats["received"] += 1
             target = self.objects.get(msg.object_key)
-            if target is not None:
+            if msg.op == "reduce":
+                # eager accumulate (small collective hop): add on the
+                # receiver's host copy — fixed per-stream arrival order
+                # is the engine's job; this just folds one contribution
+                if target is not None:
+                    fut = target.request_host(write=True)
+                    arr = fut.get()
+                    np.add(arr, np.asarray(msg.payload).reshape(arr.shape),
+                           out=arr, casting="unsafe")
+                    target.release()
+                    self.stats["coll_bytes_reduced"] += \
+                        int(msg.payload.nbytes)
+            elif target is not None:
                 if msg.path == "direct" \
                         and not isinstance(msg.payload, np.ndarray):
                     # consumer-routed device landing (ROADMAP follow-up
@@ -1301,7 +1448,7 @@ class Rank:
         least-loaded device — never a hardwired device 0."""
         ids = {d.info.device_id for d in self.runtime.devices}
         pref = meta.consumer_device
-        if pref not in ids and meta.op == "put":
+        if pref not in ids and meta.op in ("put", "reduce"):
             target = self.objects.get(meta.object_key)
             if target is not None:
                 pref = next(iter(target.resident_devices()), None)
@@ -1382,7 +1529,11 @@ class Rank:
                 "rdzv_sent": len(self._rdzv_sent),
                 "unacked": unacked,
                 "checksum_fail": self.stats["checksum_fail"],
-                "chunks_rejected": self.stats["chunks_rejected"]}
+                "chunks_rejected": self.stats["chunks_rejected"],
+                "coll_bytes_reduced": self.stats["coll_bytes_reduced"],
+                "coll_chunks_in_flight_peak":
+                    self.stats["coll_chunks_in_flight_peak"],
+                "coll_aborts": self.stats["coll_aborts"]}
 
     def _sweep_out_streams(self, peer: Optional[int] = None
                            ) -> Dict[str, int]:

@@ -143,6 +143,47 @@ def make_train_step(model: Model, tcfg: TrainConfig, param_axes=None
     return train_step
 
 
+def runtime_allreduce(group, grad_trees, average: bool = True):
+    """Gradient sync over the message-driven runtime (ROADMAP item 2).
+
+    ``grad_trees`` is one gradient pytree per group member (identical
+    treedef/leaf shapes — each member's local gradients). Leaves are
+    flattened and concatenated into one vector per member so a single
+    collective moves the whole gradient set — large models take the
+    pipelined chunked ring, small ones the eager binomial tree — then the
+    summed (or averaged) vector is split back into the original pytree
+    structure. Bit-deterministic: every member unflattens the *same*
+    reduced vector, so replicas agree exactly.
+
+    Returns one reduced pytree per member, in group-member order.
+    """
+    import numpy as np
+
+    if len(grad_trees) != len(group.members):
+        raise ValueError(
+            f"expected {len(group.members)} gradient trees, "
+            f"got {len(grad_trees)}")
+    leaves0, treedef = jax.tree.flatten(grad_trees[0])
+    shapes = [np.asarray(leaf).shape for leaf in leaves0]
+    sizes = [int(np.prod(s)) if s else 1 for s in shapes]
+    packed = []
+    for tree in grad_trees:
+        leaves = jax.tree.flatten(tree)[0]
+        if len(leaves) != len(leaves0):
+            raise ValueError("gradient trees disagree on structure")
+        packed.append(np.concatenate(
+            [np.asarray(leaf).reshape(-1) for leaf in leaves]))
+    reduced = group.allreduce(packed, average=average)
+    outs = []
+    for vec in reduced:
+        leaves, off = [], 0
+        for shape, size in zip(shapes, sizes):
+            leaves.append(vec[off:off + size].reshape(shape))
+            off += size
+        outs.append(jax.tree.unflatten(treedef, leaves))
+    return outs
+
+
 def init_train_state(model: Model, key, ef_pods: int = 0) -> TrainState:
     from repro.models.layers import unbox
     params, _ = unbox(model.init(key))
