@@ -17,6 +17,8 @@ from __future__ import annotations
 import abc
 import dataclasses
 import threading
+
+from repro.core import sanitizer
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -162,7 +164,7 @@ class JaxDevice(Device):
         # can be recycled after the kernel is garbage-collected, silently
         # launching a stale compiled function for a new kernel.
         self._jit_cache: Dict[Tuple[Callable, Tuple[int, ...]], Callable] = {}
-        self._lock = threading.Lock()
+        self._lock = sanitizer.make_lock("Device._jit_lock")
 
     def upload(self, host_array: np.ndarray) -> Any:
         arr = jax.device_put(host_array, self.jax_device)

@@ -8,7 +8,10 @@ blocking its time-slicing loop — and blocking waits with timeouts.
 from __future__ import annotations
 
 import threading
+import time
 from typing import Any, Callable, List, Optional
+
+from repro.core import sanitizer
 
 
 class HFuture:
@@ -19,7 +22,7 @@ class HFuture:
         self._result: Any = None
         self._error: Optional[BaseException] = None
         self._callbacks: List[Callable[["HFuture"], None]] = []
-        self._lock = threading.Lock()
+        self._lock = sanitizer.make_lock("HFuture._lock")
 
     # -- producer side -----------------------------------------------------
     def set_result(self, value: Any) -> None:
@@ -50,8 +53,18 @@ class HFuture:
         return self._event.is_set()
 
     def get(self, timeout: Optional[float] = None) -> Any:
-        if not self._event.wait(timeout):
-            raise TimeoutError("future not ready")
+        if not self._event.is_set():
+            # actually entering the wait path is a lane-discipline event:
+            # a serial lane parked here could just as well park forever
+            san = sanitizer.current()
+            if san is not None:
+                t0 = time.perf_counter()
+                ok = self._event.wait(timeout)
+                san.note_future_wait(time.perf_counter() - t0)
+                if not ok:
+                    raise TimeoutError("future not ready")
+            elif not self._event.wait(timeout):
+                raise TimeoutError("future not ready")
         if self._error is not None:
             raise self._error
         return self._result

@@ -18,6 +18,7 @@ from typing import Any, Dict, Optional, Set, Tuple
 
 import numpy as np
 
+from repro.core import sanitizer
 from repro.core.futures import HFuture
 
 HOST = -1
@@ -33,7 +34,7 @@ class HeteroObject:
         self.id = next(_ids)
         self.name = name or f"hobj{self.id}"
         self._rt = runtime
-        self.lock = threading.RLock()
+        self.lock = sanitizer.make_rlock("HeteroObject.lock")
         # space -> array (HOST: np.ndarray, device: jax.Array)
         self.copies: Dict[int, Any] = {}
         # dependency bookkeeping (owned by DependencyTracker, kept here for

@@ -10,7 +10,6 @@ from __future__ import annotations
 
 import enum
 import itertools
-import threading
 from typing import Any, Callable, List, Optional, Sequence, Tuple
 
 from repro.core.futures import HFuture
@@ -79,7 +78,6 @@ class HeteroTask:
         self.unresolved: int = 0
         self.dependents: List["HeteroTask"] = []
         self.chosen_device: Optional[int] = None
-        self._lock = threading.Lock()
 
     # builder API -----------------------------------------------------------
     class _ArgMode:

@@ -26,6 +26,8 @@ from __future__ import annotations
 
 import collections
 import threading
+
+from repro.core import sanitizer
 from typing import Any, List, Optional, Tuple
 
 
@@ -57,7 +59,7 @@ class LineageLedger:
     def __init__(self, cap: int = 4096):
         self.cap = int(cap)
         self.epoch = 0
-        self._lock = threading.Lock()
+        self._lock = sanitizer.make_lock("LineageLedger._lock")
         # id(written obj) -> its most recent LineageRecord (LRU order)
         self._by_obj: "collections.OrderedDict[int, LineageRecord]" = \
             collections.OrderedDict()
@@ -89,6 +91,13 @@ class LineageLedger:
     def forget(self, obj: Any) -> None:
         with self._lock:
             self._by_obj.pop(id(obj), None)
+
+    def forget_many(self, objs: Any) -> None:
+        """Batched ``forget`` for the replay rebind loop: fused-chain
+        outputs drop their stale records under one lock acquisition."""
+        with self._lock:
+            for obj in objs:
+                self._by_obj.pop(id(obj), None)
 
     def bump_epoch(self) -> None:
         """Elastic epoch bump: records survive (generation checks keep

@@ -12,6 +12,8 @@ from __future__ import annotations
 
 import collections
 import threading
+
+from repro.core import sanitizer
 from typing import Any, Callable, Dict, List, Tuple
 
 import numpy as np
@@ -24,7 +26,7 @@ class StagingPool:
         self.enabled = enabled
         self._free: Dict[Tuple[Tuple[int, ...], str], List[np.ndarray]] = \
             collections.defaultdict(list)
-        self._lock = threading.Lock()
+        self._lock = sanitizer.make_lock("StagingPool._lock")
         self._max = max_buffers_per_key
         self.hits = 0
         self.misses = 0
@@ -61,7 +63,7 @@ class RequestPool:
         self._factory = factory
         self.enabled = enabled
         self._free: List[Any] = []
-        self._lock = threading.Lock()
+        self._lock = sanitizer.make_lock("RequestPool._lock")
         self.hits = 0
         self.misses = 0
 

@@ -57,6 +57,7 @@ import queue
 import threading
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from repro.core import sanitizer
 from repro.core.futures import HFuture
 
 LaneKey = Tuple[Any, ...]
@@ -90,8 +91,8 @@ class _LanePool:
     def __init__(self, name: str, workers: int):
         self.name = name
         self.base = max(1, int(workers))
-        self._lock = threading.Lock()
-        self._cond = threading.Condition(self._lock)
+        self._lock = sanitizer.make_lock("LanePool._lock")
+        self._cond = sanitizer.make_condition(self._lock)
         self._ready: "collections.deque" = collections.deque()
         self._idle = 0
         self._unclaimed = 0
@@ -192,14 +193,18 @@ class Lane:
     is posted to the returned future. Lower priority runs first, FIFO
     within a priority level."""
 
-    __slots__ = ("name", "_q", "_seq", "_pending", "_pending_lock",
+    __slots__ = ("name", "kind", "_q", "_seq", "_pending", "_pending_lock",
                  "_executing", "_thread", "_stopped", "jobs_done",
                  "on_error", "_pool", "_scheduled", "_dead")
 
     def __init__(self, name: str,
                  on_error: Optional[Callable[[str, BaseException], None]]
-                 = None, pool: Optional[_LanePool] = None):
+                 = None, pool: Optional[_LanePool] = None,
+                 kind: str = ""):
         self.name = name
+        # lane type ("net-send", "transfer", ...) — the sanitizer's
+        # lane-discipline policy is keyed on it (LANE_BLOCKING_OK)
+        self.kind = kind
         self._q: "queue.PriorityQueue" = queue.PriorityQueue()
         self._seq = itertools.count()
         # jobs accepted but not yet finished (queued + executing). The
@@ -209,7 +214,7 @@ class Lane:
         # AFTER PriorityQueue.get() returned, and Cluster.barrier's
         # all-idle sweep could slip through that gap).
         self._pending = 0
-        self._pending_lock = threading.Lock()
+        self._pending_lock = sanitizer.make_lock("Lane._pending_lock")
         self._executing = False
         self._stopped = False
         self.jobs_done = 0
@@ -267,6 +272,11 @@ class Lane:
         return max(self._pending - (1 if self._executing else 0), 0)
 
     def _run_job(self, fn: Callable[[], Any], fut: Optional[HFuture]) -> None:
+        # publish the lane context so the sanitizer can flag blocking
+        # operations executed on strict serial lanes (no-op when off)
+        san = sanitizer.current()
+        tok = san.enter_lane(self.name, self.kind) if san is not None \
+            else None
         self._executing = True
         try:
             result = fn()
@@ -284,6 +294,8 @@ class Lane:
         finally:
             self.jobs_done += 1
             self._executing = False
+            if san is not None:
+                san.exit_lane(tok)
             with self._pending_lock:
                 self._pending -= 1
 
@@ -330,7 +342,7 @@ class ProgressEngine:
         self.name = name
         self.strict = strict
         self._lanes: Dict[LaneKey, Lane] = {}
-        self._lock = threading.Lock()
+        self._lock = sanitizer.make_lock("ProgressEngine._lock")
         self._shutdown = False
         self._errors: List[Tuple[str, BaseException]] = []
         self._pool = (_LanePool(name, pool_workers)
@@ -377,7 +389,7 @@ class ProgressEngine:
                     raise RuntimeError("progress engine is shut down")
                 tag = "-".join(str(p) for p in k)
                 ln = Lane(f"{self.name}-{tag}", on_error=self._record_error,
-                          pool=self._pool)
+                          pool=self._pool, kind=kind)
                 self._lanes[k] = ln
             return ln
 

@@ -25,6 +25,8 @@ import abc
 import collections
 import itertools
 import threading
+
+from repro.core import sanitizer
 from typing import Any, Callable, Dict, Optional, Sequence, Set, Tuple
 
 _touch_clock = itertools.count()
@@ -68,7 +70,7 @@ class ResidencyLedger:
         # pinner always holds a strong reference for the pin's lifetime,
         # so a recycled id() cannot alias a live pin.
         self._pins: Dict[int, int] = {}
-        self._lock = threading.RLock()
+        self._lock = sanitizer.make_rlock("ResidencyLedger._lock")
         self.evictions = 0
         self.version = 0          # bumped on every record/drop
 
@@ -99,6 +101,37 @@ class ResidencyLedger:
                 if not devs:
                     del self._where[id(obj)]
 
+    def drop_many(self, pairs: Sequence[Tuple[int, Any]]) -> None:
+        """Batched ``drop``: one lock acquisition for a replay window's
+        rebind invalidations instead of one per stale replica."""
+        with self._lock:
+            for device_id, obj in pairs:
+                nb = obj.nbytes
+                if self._lru[device_id].pop(id(obj), None) is not None:
+                    self._usage[device_id] -= nb
+                    self.version += 1
+                devs = self._where.get(id(obj))
+                if devs is not None:
+                    devs.discard(device_id)
+                    if not devs:
+                        del self._where[id(obj)]
+
+    def record_many(self, pairs: Sequence[Tuple[int, Any]]) -> None:
+        """Batched ``record``: one lock acquisition for a whole replay
+        window's rebinds instead of one per written object."""
+        with self._lock:
+            for device_id, obj in pairs:
+                nb = obj.nbytes
+                lru = self._lru[device_id]
+                if id(obj) not in lru:
+                    self._usage[device_id] += nb
+                    lru[id(obj)] = _Entry(obj, nb)
+                    self.version += 1
+                else:
+                    lru[id(obj)].last_touch = next(_touch_clock)
+                lru.move_to_end(id(obj))
+                self._where.setdefault(id(obj), set()).add(device_id)
+
     # -- pin ownership (eviction guard) --------------------------------
     def pin(self, obj) -> None:
         """Mark ``obj`` in active use (task argument, host access, device
@@ -113,6 +146,24 @@ class ResidencyLedger:
                 self._pins.pop(id(obj), None)
             else:
                 self._pins[id(obj)] = n
+
+    def pin_many(self, objs: Sequence[Any]) -> None:
+        """Batched ``pin`` — the replay fast path pins a whole traced
+        window's objects under a single lock acquisition."""
+        with self._lock:
+            pins = self._pins
+            for obj in objs:
+                pins[id(obj)] = pins.get(id(obj), 0) + 1
+
+    def unpin_many(self, objs: Sequence[Any]) -> None:
+        with self._lock:
+            pins = self._pins
+            for obj in objs:
+                n = pins.get(id(obj), 0) - 1
+                if n <= 0:
+                    pins.pop(id(obj), None)
+                else:
+                    pins[id(obj)] = n
 
     def pinned(self, obj) -> bool:
         with self._lock:
@@ -135,6 +186,16 @@ class ResidencyLedger:
             if e is not None:
                 e.last_touch = next(_touch_clock)
                 self._lru[device_id].move_to_end(id(obj))
+
+    def touch_many(self, pairs: Sequence[Tuple[int, Any]]) -> None:
+        """Batched ``touch``: LRU-bump a replay window's staged replicas
+        under one lock acquisition."""
+        with self._lock:
+            for device_id, obj in pairs:
+                e = self._lru[device_id].get(id(obj))
+                if e is not None:
+                    e.last_touch = next(_touch_clock)
+                    self._lru[device_id].move_to_end(id(obj))
 
     # -- queries --------------------------------------------------------
     def devices_of(self, obj) -> Set[int]:

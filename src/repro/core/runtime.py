@@ -78,8 +78,10 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import clock
 from repro.core import dependency as dep
 from repro.core import device_api
+from repro.core import sanitizer
 from repro.core.device_api import Device, JaxDevice, discover_devices
 from repro.core.futures import HFuture
 from repro.core.hetero_object import HOST, HeteroObject
@@ -211,12 +213,26 @@ class RuntimeConfig:
     # handler invocation to one collective op) wrap at this size, so at
     # most this many collectives may be in flight per group at once
     coll_tag_space: int = 1 << 12
+    # -- concurrency sanitizer (core/sanitizer.py) --
+    # sanitize: install the process-global RuntimeSanitizer before this
+    # runtime builds its locks — lock-order tracking, lane-discipline
+    # enforcement, wait-graph barrier diagnostics, and gauge-hygiene
+    # assertions at Rank shutdown. Defaults on when REPRO_SANITIZE=1
+    # (the CI sanitize shard sets only the env var)
+    sanitize: bool = dataclasses.field(default_factory=sanitizer.env_enabled)
+    # contended-lock threshold: a tracked-lock acquire that waits at
+    # least this long on a strict lane counts as a lane-blocking event
+    sanitize_block_s: float = 0.010
 
 
 class Runtime:
     def __init__(self, config: Optional[RuntimeConfig] = None,
                  devices: Optional[List[Device]] = None):
         self.cfg = config or RuntimeConfig()
+        if self.cfg.sanitize:
+            # must precede every lock construction below: the factories
+            # consult the global sanitizer at creation time
+            sanitizer.install(self.cfg.sanitize_block_s)
         self.devices: List[Device] = devices if devices is not None else \
             discover_devices(self.cfg.memory_capacity, self.cfg.cache_jit)
         for d in self.devices:
@@ -240,8 +256,8 @@ class Runtime:
                                 self.cfg.topology_probe_bytes)
         self.staging = StagingPool(self.cfg.staging_pool)
         self.futures = RequestPool(HFuture, self.cfg.request_pool)
-        self._lock = threading.RLock()
-        self._work = threading.Condition(self._lock)
+        self._lock = sanitizer.make_rlock("Runtime._lock")
+        self._work = sanitizer.make_condition(self._lock)
         self._tasks_pending = 0
         self._shutdown = False
         self._stats = {"tasks": 0, "transfers_h2d": 0, "transfers_d2h": 0,
@@ -255,7 +271,7 @@ class Runtime:
         # lineage ledger: producer records for lost-replica recovery
         self.lineage: Optional[LineageLedger] = (
             LineageLedger() if self.cfg.lineage_depth > 0 else None)
-        self._lineage_lock = threading.RLock()
+        self._lineage_lock = sanitizer.make_rlock("Runtime._lineage_lock")
         self._recovering: set = set()       # cycle guard (object ids)
         self._failed_tasks: List[BaseException] = []
         self._inject_task_faults = 0        # FaultInjector.fail_task budget
@@ -418,11 +434,11 @@ class Runtime:
             # window (synchronously, so the wait below sees it retired)
             # or advance recurrence detection
             self._tracer.on_boundary()
-        deadline = None if timeout is None else time.time() + timeout
+        deadline = None if timeout is None else clock.now() + timeout
         with self._lock:
             while self._tasks_pending > 0:
                 remaining = None if deadline is None else \
-                    max(deadline - time.time(), 0.0)
+                    max(deadline - clock.now(), 0.0)
                 if not self._work.wait(timeout=remaining):
                     raise TimeoutError(
                         f"barrier: {self._tasks_pending} tasks pending")
@@ -447,6 +463,9 @@ class Runtime:
         s["topology"] = self.topology.snapshot()
         s["progress_lanes"] = self.engine.lanes_snapshot()
         s["progress_errors"] = self.engine.error_count()
+        san = sanitizer.current()
+        if san is not None:
+            s["sanitizer"] = san.stats_snapshot()
         return s
 
     def shutdown(self) -> None:
@@ -1099,7 +1118,7 @@ class Runtime:
             self.lineage.record(
                 task.kernel,
                 [(ref.obj, g, ref.access.reads, ref.access.writes)
-                 for ref, g in zip(task.args, pre_gens)],
+                 for ref, g in zip(task.args, pre_gens, strict=True)],
                 out_gens, device_id)
         return handle
 

@@ -32,6 +32,7 @@ import collections
 import threading
 from typing import Deque, Dict, List, Optional, Tuple
 
+from repro.core import sanitizer
 from repro.core.hetero_task import HeteroTask
 from repro.core.residency import (DataGravityPolicy, PlacementPolicy,
                                   ResidencyLedger)
@@ -48,7 +49,7 @@ class Scheduler(abc.ABC):
         self.device_types = dict(device_types)
         self.load: Dict[int, int] = {d: 0 for d in device_types}
         self.placement = placement
-        self._lock = threading.Lock()
+        self._lock = sanitizer.make_lock("Scheduler._lock")
 
     def bind_residency(self, ledger: ResidencyLedger) -> None:
         if self.placement is not None:

@@ -55,7 +55,9 @@ from __future__ import annotations
 import threading
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from repro.core import sanitizer
 from repro.core import device_api
+from repro.core.hetero_object import HOST
 from repro.core.hetero_task import HeteroTask, TaskState
 
 __all__ = ["GraphTracer", "TracedGraph"]
@@ -99,11 +101,11 @@ def _make_chain_fn(specs, in_slots, out_slots):
     path threads written arrays through the hetero_objects."""
 
     def chain_fn(*xs):
-        env = dict(zip(in_slots, xs))
+        env = dict(zip(in_slots, xs, strict=True))
         for kern, arg_slots, write_slots in specs:
             res = kern(*(env[s] for s in arg_slots))
             outs = res if isinstance(res, (tuple, list)) else (res,)
-            for ws, out in zip(write_slots, outs):
+            for ws, out in zip(write_slots, outs, strict=False):
                 env[ws] = out
         return tuple(env[s] for s in out_slots)
 
@@ -150,7 +152,7 @@ class GraphTracer:
     def __init__(self, runtime, replay_after: int = 3):
         self.rt = runtime
         self.replay_after = max(1, int(replay_after))
-        self._lock = threading.RLock()
+        self._lock = sanitizer.make_rlock("GraphTracer._lock")
         self._window: List[Tuple[HeteroTask, Callable]] = []
         self._prev_key: Optional[Tuple] = None
         self._streak = 0
@@ -248,7 +250,8 @@ class GraphTracer:
         if len(task.args) != len(node.arg_slots):
             return False
         objects = self._graph.objects
-        for ref, slot, mode in zip(task.args, node.arg_slots, node.modes):
+        for ref, slot, mode in zip(task.args, node.arg_slots, node.modes,
+                                   strict=False):
             if ref.obj is not objects[slot] or ref.access is not mode:
                 return False
         return True
@@ -352,15 +355,21 @@ class GraphTracer:
         parked, self._parked = self._parked, []
         self._match_idx = 0
         stale = False
-        for obj in g.objects:
-            rt.residency.pin(obj)
+        rt.residency.pin_many(g.objects)
         try:
-            # pre-planned entry transfers, issued as one batch up front
+            # pre-planned entry transfers, issued as one batch up front;
+            # LRU bumps for already-resident replicas are deferred and
+            # applied under a single ledger acquisition
             staged: Dict[Tuple[int, int], Any] = {}
+            touched: List[Tuple[int, Any]] = []
             for slot, dev, expected_resident in g.entries:
                 obj = g.objects[slot]
-                with obj.lock:
-                    arr = obj.copies.get(dev)
+                # lock-free replica read: every window object is pinned
+                # (no eviction) and every task touching it is parked in
+                # this window (no concurrent rebind), so ``copies``
+                # cannot change underneath us; a stale miss only falls
+                # back to the coherence walk below
+                arr = obj.copies.get(dev)
                 if arr is None:
                     if expected_resident:
                         # a replica the plan counted on was evicted: the
@@ -369,8 +378,10 @@ class GraphTracer:
                         stale = True
                     arr = rt._ensure_on_device(obj, dev, will_write=False)
                 else:
-                    rt.residency.touch(dev, obj)
+                    touched.append((dev, obj))
                 staged[(slot, dev)] = arr
+            if touched:
+                rt.residency.touch_many(touched)
             # one dispatch per fused chain, in submission (= topo) order;
             # cross-chain values travel through env, not the objects
             env: Dict[int, Tuple[int, Any]] = {}
@@ -396,7 +407,7 @@ class GraphTracer:
                     ch.fn, tuple(inputs), donate=())
                 outs = handle if isinstance(handle, (tuple, list)) \
                     else (handle,)
-                for s, arr in zip(ch.out_slots, outs):
+                for s, arr in zip(ch.out_slots, outs, strict=False):
                     env[s] = (ch.device, arr)
             # rebind written objects once, exactly like _launch does:
             # drop every old copy, the chain output becomes the only one.
@@ -405,23 +416,37 @@ class GraphTracer:
             # replayed object is NOT lineage-recoverable (documented in
             # the recovery taxonomy), but the generation bump alone
             # already makes stale records unreplayable.
+            written: List[Tuple[int, Any]] = []
+            dropped: List[Tuple[int, Any]] = []
             for s, (dev, arr) in env.items():
                 obj = g.objects[s]
                 with obj.lock:
                     for sp in list(obj.copies):
-                        rt._drop_copy(obj, sp)
+                        if sp == HOST:
+                            # host copies go through _drop_copy so pooled
+                            # staging buffers return to the pool
+                            rt._drop_copy(obj, sp)
+                        else:
+                            del obj.copies[sp]
+                            dropped.append((sp, obj))
                     obj.copies[dev] = arr
                     obj.generation += 1
-                    rt.residency.record(dev, obj)
-                if rt.lineage is not None:
-                    rt.lineage.forget(obj)
+                written.append((dev, obj))
+            # ledger drops/records and lineage forgets are batched: one
+            # lock acquisition each for the whole window. Eviction
+            # consults the ledger under pins we still hold, so the brief
+            # gap between a rebind and its record only delays
+            # evictability.
+            rt.residency.drop_many(dropped)
+            rt.residency.record_many(written)
+            if rt.lineage is not None:
+                rt.lineage.forget_many(obj for _d, obj in written)
         except BaseException as e:
             self._retire_parked(parked, error=e)
             self._invalidate_locked()
             return
         finally:
-            for obj in g.objects:
-                rt.residency.unpin(obj)
+            rt.residency.unpin_many(g.objects)
         g.replays += 1
         rt._stats["graph_replays"] += 1
         rt._stats["replayed_tasks"] += len(parked)

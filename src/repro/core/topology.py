@@ -22,6 +22,7 @@ from __future__ import annotations
 import threading
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.core import sanitizer
 from repro.core.hetero_object import HOST
 
 # defaults before any sample arrives: a conservative PCIe-gen3-ish link.
@@ -84,7 +85,7 @@ class InterconnectModel:
         self._default_bw = default_bandwidth
         self._default_lat = default_latency
         self._links: Dict[Tuple[int, int], LinkEstimate] = {}
-        self._lock = threading.Lock()
+        self._lock = sanitizer.make_lock("InterconnectModel._lock")
 
     def _link(self, src: int, dst: int) -> LinkEstimate:
         key = (src, dst)

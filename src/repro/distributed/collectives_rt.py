@@ -50,6 +50,7 @@ from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core import sanitizer
 from repro.distributed.handlers import handler
 
 __all__ = ["CollectiveGroup", "CollectiveAborted"]
@@ -167,7 +168,7 @@ class CollectiveGroup:
         self.ring_m: List[int] = cluster.topology.ring_order(self.members)
         self._tree_cache: Dict[int, List[int]] = {}
         self._tag_counter = itertools.count()
-        self._lock = threading.Lock()
+        self._lock = sanitizer.make_lock("CollectiveGroup._lock")
         self._ops: Dict[int, Dict[str, Any]] = {}
         reg = getattr(cluster, "_coll_groups", None)
         if reg is None:
@@ -192,7 +193,7 @@ class CollectiveGroup:
                     f"ops in flight with coll_tag_space={self.tag_space}")
             op = {"tag": tag, "kind": kind, "epoch": self.epoch_fn(),
                   "done": threading.Event(), "err": None, "aborted": False,
-                  "lock": threading.Lock(),
+                  "lock": sanitizer.make_lock("CollectiveGroup.op_lock"),
                   "keys": {m: [] for m in self.members}}
             self._ops[tag] = op
         return op

@@ -37,6 +37,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import sanitizer
 from repro.distributed import handlers as H
 from repro.distributed.mobile_object import OwnerMap, rebalance_greedy
 
@@ -210,9 +211,9 @@ class ElasticRuntime:
             [r.rank for r in cluster.ranks],
             heartbeat_timeout=self.timeout, clock=clock)
         self.epoch = 0
-        self._lock = threading.RLock()
+        self._lock = sanitizer.make_rlock("ElasticRuntime._lock")
         self._beats: List[Tuple[int, float]] = []
-        self._beats_lock = threading.Lock()
+        self._beats_lock = sanitizer.make_lock("ElasticRuntime._beats_lock")
         self._tokens = itertools.count()
         self._landings: Dict[int, threading.Event] = {}
         self._pending: List[Tuple[threading.Event, Any, Any, bool]] = []
@@ -521,9 +522,13 @@ class ElasticRuntime:
 
     def report(self) -> Dict[str, Any]:
         mon = self.cluster.ranks[self.monitor]
-        return {
+        rep = {
             "elastic": dict(self.stats),
             "monitor_stats": {k: mon.stats[k] for k in
                               ("heartbeats_missed", "recovery_stall_s",
                                "retries", "chunks_migrated")},
         }
+        san = sanitizer.current()
+        if san is not None:
+            rep["sanitizer"] = san.stats_snapshot()
+        return rep

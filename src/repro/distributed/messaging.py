@@ -88,6 +88,7 @@ from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 import numpy as np
 
 from repro.core import HeteroObject, Runtime, RuntimeConfig
+from repro.core import clock, sanitizer
 from repro.core.device_api import transfer as d2d_transfer
 from repro.core.futures import HFuture
 from repro.core.hetero_object import HOST
@@ -245,7 +246,7 @@ class Rank:
         self.inbox: "queue.PriorityQueue" = queue.PriorityQueue()
         self._inbox_seq = itertools.count()
         self.outgoing: List[Tuple[HFuture, Message, HeteroObject]] = []
-        self._out_lock = threading.Lock()
+        self._out_lock = sanitizer.make_lock("Rank._out_lock")
         self._pending_meta: Dict[int, Message] = {}
         # rendezvous bookkeeping: outgoing stream state (parked payload,
         # window credits, send cursor) per msg_id — mutated ONLY on the
@@ -263,7 +264,7 @@ class Rank:
         # duplicate-suppression set of completed deliveries
         self._reliability = False
         self._unacked: Dict[int, Dict[str, Any]] = {}
-        self._unacked_lock = threading.Lock()
+        self._unacked_lock = sanitizer.make_lock("Rank._unacked_lock")
         self._rdzv_sent: Dict[int, Dict[str, Any]] = {}
         self._seen: Set[int] = set()
         self._seen_order: "collections.deque[int]" = collections.deque()
@@ -285,7 +286,7 @@ class Rank:
         # eager sends flush inline on the caller thread, concurrently
         # with the pump's own flush/handle cycle.
         self._active = 0
-        self._active_lock = threading.Lock()
+        self._active_lock = sanitizer.make_lock("Rank._active_lock")
         self.objects: Dict[Any, HeteroObject] = {}   # global ptr -> object
         # handler name -> local device id: where this rank wants payloads
         # for that handler landed (consumer routing, set via route_to)
@@ -1261,6 +1262,8 @@ class Rank:
             for k in range(meta.nchunks):
                 fut, _ = uploads[k]
                 try:
+                    # bounded wait on the net-recv lane, which tolerates
+                    # blocking by design  # lint: allow-blocking
                     parts.append(fut.get(timeout=timeout))
                 except TimeoutError:
                     raise TimeoutError(
@@ -1293,7 +1296,7 @@ class Rank:
                 if target is not None:
                     if meta.op == "reduce" and state["slab"] is None:
                         fut = target.request_host(write=True)
-                        arr = fut.get()
+                        arr = fut.get()  # lint: allow-blocking (net-recv lane)
                         np.add(arr, np.asarray(assembled).reshape(arr.shape),
                                out=arr, casting="unsafe")
                         target.release()
@@ -1623,11 +1626,26 @@ class Rank:
         self.enqueue(None)
         self._thread.join(timeout=self.runtime.cfg.pump_join_timeout_s)
         self.runtime.shutdown()
+        # gauge hygiene (sanitizer): on a clean run every leak gauge must
+        # have drained BEFORE the sweeps below reclaim stranded state —
+        # the sweeps exist for faulted runs, not as a leak amnesty. The
+        # check is captured here and raised after the sweeps so teardown
+        # still completes. Skipped when a FaultInjector is attached
+        # (killed peers legitimately strand streams) or this rank is dead.
+        leak = None
+        if (sanitizer.current() is not None and self.runtime.cfg.sanitize
+                and self.cluster.faults is None):
+            leak = sanitizer.gauge_leak_report(self)
         # lanes are drained and joined: release whatever rendezvous
         # state in-flight shutdown stranded (pooled buffers back to the
         # pool, reassembly/metadata entries dropped)
         self._sweep_out_streams()
         self._sweep_in_state()
+        if leak is not None:
+            san = sanitizer.current()
+            if san is not None:
+                san.note_gauge_leaks(1)
+            raise sanitizer.SanitizerError(leak)
 
 
 class FaultInjector:
@@ -1665,7 +1683,7 @@ class FaultInjector:
     def __init__(self, cluster: "Cluster", seed: int = 0):
         self.cluster = cluster
         self.rng = random.Random(seed)
-        self._lock = threading.Lock()
+        self._lock = sanitizer.make_lock("FaultInjector._lock")
         self.dead: Set[int] = set()
         self.frozen: Dict[int, float] = {}     # rank -> thaw instant
         self.links: Dict[Tuple[int, int], Dict[str, float]] = {}
@@ -1894,7 +1912,7 @@ class Cluster:
         self.topology = InterconnectModel()
         self.net = ProgressEngine(name="net")
         self._inflight = 0             # messages on a link lane right now
-        self._inflight_lock = threading.Lock()
+        self._inflight_lock = sanitizer.make_lock("Cluster._inflight_lock")
         # per-directed-link wire model: the perf_counter instant the wire
         # is next free. Advanced by the EXACT modeled transmission time,
         # so sleep overshoot never accumulates across a chunk stream
@@ -1904,7 +1922,7 @@ class Cluster:
         # control-VC occupancy schedule (finite drain rate): written from
         # ANY delivering thread at reservation time, hence its own lock
         self._ctrl_free: Dict[Tuple[int, int], float] = {}
-        self._ctrl_lock = threading.Lock()
+        self._ctrl_lock = sanitizer.make_lock("Cluster._ctrl_lock")
         self.ctrl_stats = {"msgs": 0, "queued_s": 0.0,
                            "adaptive": self._ctrl_adaptive,
                            "drain_per_s": (self.CTRL_DRAIN_SEED
@@ -1958,14 +1976,22 @@ class Cluster:
         for every millisecond of simulated wire time — on small hosts
         that starvation re-creates the very head-of-line blocking the
         cut-through model removes."""
+        san = sanitizer.current()
+        if san is not None:
+            # simulated wire time is a sleep: flag it if it ever runs on
+            # a strict lane (link/linkctl lanes are blocking-allowed)
+            san.note_sleep(max(deadline - time.perf_counter(), 0.0),
+                           "Cluster._sleep_until")
         while True:
             remaining = deadline - time.perf_counter()
             if remaining <= 0:
                 return
             if remaining > 150e-6:
+                # simulated wire latency on the link/linkctl lanes, which
+                # tolerate blocking by design  # lint: allow-blocking
                 time.sleep(remaining - 100e-6)
             else:
-                time.sleep(0)          # sched_yield: precise, cooperative
+                time.sleep(0)  # sched_yield  # lint: allow-blocking
 
     def _priority(self, msg: Message, nbytes: int) -> int:
         """Virtual channels on the simulated wire: control traffic first,
@@ -2202,7 +2228,7 @@ class Cluster:
         previous one goes idle, so anything in flight during sweep one is
         visible somewhere by sweep two. Ranks the fault injector has
         killed are skipped — they are partitioned, not draining."""
-        deadline = time.time() + timeout
+        deadline = clock.now() + timeout
         idle_sweeps = 0
         while idle_sweeps < 2:
             dead = self.faults.dead if self.faults is not None \
@@ -2211,10 +2237,17 @@ class Cluster:
                     or any(self._rank_busy(r) for r in self.ranks
                            if r.rank not in dead):
                 idle_sweeps = 0
-                if time.time() > deadline:
+                if clock.now() > deadline:
+                    diag = self._barrier_diagnostics()
+                    if sanitizer.current() is not None:
+                        # wait-graph verdict: turn the raw backlog dump
+                        # into a named root cause (deadlock cycle across
+                        # ranks/streams, or the slowest lane)
+                        diag += ("; waitgraph: "
+                                 + sanitizer.waitgraph_verdict(self))
                     raise TimeoutError(
                         f"cluster barrier timeout after {timeout:.1f}s — "
-                        + self._barrier_diagnostics())
+                        + diag)
                 time.sleep(0.001)
             else:
                 idle_sweeps += 1
@@ -2222,13 +2255,22 @@ class Cluster:
         for r in self.ranks:
             if r.rank in dead:
                 continue
-            r.runtime.barrier(timeout=max(deadline - time.time(), 1.0))
+            r.runtime.barrier(timeout=max(deadline - clock.now(), 1.0))
             r.check()      # strict mode: surface swallowed handler errors
 
     def shutdown(self):
+        # a sanitizer gauge-leak assertion on one rank must not leave the
+        # remaining ranks (and the network engine) running: finish the
+        # teardown, then re-raise the first failure
+        errs: List[BaseException] = []
         for r in self.ranks:
-            r.shutdown()
+            try:
+                r.shutdown()
+            except sanitizer.SanitizerError as e:
+                errs.append(e)
         self.net.shutdown()
+        if errs:
+            raise errs[0]
 
     def __enter__(self):
         return self

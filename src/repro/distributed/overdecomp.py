@@ -23,7 +23,7 @@ class Chunk:
 
     @property
     def shape(self) -> Tuple[int, ...]:
-        return tuple(h - l for l, h in zip(self.lo, self.hi))
+        return tuple(h - l for l, h in zip(self.lo, self.hi, strict=True))
 
 
 @dataclasses.dataclass(frozen=True)

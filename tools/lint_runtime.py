@@ -1,0 +1,391 @@
+#!/usr/bin/env python
+"""Runtime-discipline lint for the repro runtime (AST-based, stdlib-only).
+
+Scope: ``src/repro/core`` and ``src/repro/distributed``. Four rules:
+
+R1  wall-clock ban — no ``time.time()`` / ``time.monotonic()`` calls.
+    Deadline arithmetic must go through ``repro.core.clock`` so tests can
+    inject a fake clock and NTP steps cannot corrupt timeouts.
+    ``time.perf_counter()`` (interval measurement) stays legal.
+    ``src/repro/core/clock.py`` is the one exempt module.
+
+R2  raw-lock ban — no ``threading.Lock() / RLock() / Condition()``
+    construction. Locks must come from ``sanitizer.make_lock`` /
+    ``make_rlock`` / ``make_condition`` so the concurrency sanitizer can
+    wrap them for lock-order tracking. ``sanitizer.py`` itself is exempt
+    (it builds the primitives it wraps).
+
+R3  stats-key registration — every constant key written through a
+    ``*stats[...]`` subscript must appear in some registered surface:
+    a dict literal initialising a ``*stats`` attribute, a
+    ``stats()`` / ``state_gauges()`` / ``stats_snapshot()`` method, or a
+    ``*stats.setdefault(...)`` call. Unregistered keys are counters that
+    exist only while incremented — invisible to reports and leak checks.
+    The registry is global across the scope (writers and surfaces may
+    live in different modules).
+
+R4  lane-blocking ban — functions submitted to progress-engine lanes
+    (``<lane>.submit(fn)``, ``engine.submit(kind, key, fn)``,
+    ``net.submit(kind, link, fn)``) must not block: no ``.result()``,
+    no ``.wait(...)``, no ``fut.get(...)``, no ``time.sleep``. Resolved
+    one call level deep within the same module. A genuine, bounded wait
+    on an allowed lane is annotated ``# lint: allow-blocking`` on the
+    offending line or the enclosing ``def`` line — the annotation is a
+    reviewed contract, not a free pass.
+
+Findings not expressible as code changes go in
+``tools/lint_runtime_allowlist.txt`` (one ``RULE path::qualname`` per
+line). Stale entries are themselves errors, so the allowlist can only
+shrink.
+
+Exit status: 0 clean, 1 findings, 2 usage/internal error.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional, Set, Tuple
+
+REPO = Path(__file__).resolve().parent.parent
+SCOPE = ("src/repro/core", "src/repro/distributed")
+R1_EXEMPT = {"src/repro/core/clock.py"}
+R2_EXEMPT = {"src/repro/core/sanitizer.py"}
+ALLOWLIST = REPO / "tools" / "lint_runtime_allowlist.txt"
+
+WALLCLOCK = {"time", "monotonic"}          # attrs of the time module
+LOCK_CTORS = {"Lock", "RLock", "Condition"}
+STATS_SURFACES = {"stats", "state_gauges", "stats_snapshot"}
+ESCAPE = "lint: allow-blocking"
+
+
+class Finding:
+    def __init__(self, rule: str, path: str, line: int, qual: str,
+                 msg: str) -> None:
+        self.rule = rule
+        self.path = path
+        self.line = line
+        self.qual = qual
+        self.msg = msg
+
+    @property
+    def key(self) -> str:
+        return f"{self.rule} {self.path}::{self.qual}"
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} [{self.qual}] {self.msg}"
+
+
+def _is_stats_name(node: ast.AST) -> bool:
+    """True for expressions naming a stats container: ``self.stats``,
+    ``rank._stats``, ``mon.ctrl_stats``, bare ``stats``…"""
+    if isinstance(node, ast.Attribute):
+        return node.attr.endswith("stats") or node.attr.endswith("_stats")
+    if isinstance(node, ast.Name):
+        return node.id.endswith("stats")
+    return False
+
+
+def _const_key(sub: ast.Subscript) -> Optional[str]:
+    sl = sub.slice
+    if isinstance(sl, ast.Constant) and isinstance(sl.value, str):
+        return sl.value
+    return None
+
+
+class _QualTracker(ast.NodeVisitor):
+    """Base visitor that maintains the enclosing qualname stack."""
+
+    def __init__(self) -> None:
+        self.stack: List[str] = []
+
+    @property
+    def qual(self) -> str:
+        return ".".join(self.stack) if self.stack else "<module>"
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self.stack.append(node.name)
+        self.generic_visit(node)
+        self.stack.pop()
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self.stack.append(node.name)
+        self.generic_visit(node)
+        self.stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef  # type: ignore[assignment]
+
+
+class _Registry(_QualTracker):
+    """Pass 1 of R3: collect every registered stats key in a module."""
+
+    def __init__(self) -> None:
+        super().__init__()
+        self.keys: Set[str] = set()
+
+    def _dict_keys(self, node: ast.AST) -> None:
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Dict):
+                for k in sub.keys:
+                    if isinstance(k, ast.Constant) and isinstance(k.value, str):
+                        self.keys.add(k.value)
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        if any(_is_stats_name(t) for t in node.targets):
+            self._dict_keys(node.value)
+        self.generic_visit(node)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
+        if node.value is not None and _is_stats_name(node.target):
+            self._dict_keys(node.value)
+        self.generic_visit(node)
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        if node.name in STATS_SURFACES:
+            # every string constant inside a stats surface registers a key
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Constant) and isinstance(sub.value, str):
+                    self.keys.add(sub.value)
+        super().visit_FunctionDef(node)
+
+    visit_AsyncFunctionDef = visit_FunctionDef  # type: ignore[assignment]
+
+    def visit_Call(self, node: ast.Call) -> None:
+        f = node.func
+        if (isinstance(f, ast.Attribute) and f.attr in ("setdefault", "update")
+                and _is_stats_name(f.value)):
+            for a in node.args:
+                if isinstance(a, ast.Constant) and isinstance(a.value, str):
+                    self.keys.add(a.value)
+                self._dict_keys(a)
+        self.generic_visit(node)
+
+
+class _Checker(_QualTracker):
+    """Pass 2: R1, R2, R3-writes, and lane-submission discovery for R4."""
+
+    def __init__(self, path: str, registry: Set[str],
+                 lines: List[str]) -> None:
+        super().__init__()
+        self.path = path
+        self.registry = registry
+        self.lines = lines
+        self.findings: List[Finding] = []
+        self.defs: Dict[str, ast.FunctionDef] = {}
+        self.submitted: Set[str] = set()         # function names given to lanes
+        self.submitted_lambdas: List[Tuple[ast.Lambda, str]] = []
+
+    def _flag(self, rule: str, node: ast.AST, msg: str) -> None:
+        self.findings.append(
+            Finding(rule, self.path, node.lineno, self.qual, msg))
+
+    # -- R1 / R2 / submit discovery ------------------------------------
+    def visit_Call(self, node: ast.Call) -> None:
+        f = node.func
+        if isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name):
+            if (f.value.id == "time" and f.attr in WALLCLOCK
+                    and self.path not in R1_EXEMPT):
+                self._flag("R1", node,
+                           f"wall-clock time.{f.attr}() — use "
+                           "repro.core.clock (perf_counter ok)")
+            if (f.value.id == "threading" and f.attr in LOCK_CTORS
+                    and self.path not in R2_EXEMPT):
+                self._flag("R2", node,
+                           f"raw threading.{f.attr}() — use "
+                           f"sanitizer.make_{f.attr.lower()}")
+        if isinstance(f, ast.Attribute) and f.attr == "submit":
+            for a in node.args:
+                if isinstance(a, ast.Name):
+                    self.submitted.add(a.id)
+                elif isinstance(a, ast.Attribute):
+                    self.submitted.add(a.attr)
+                elif isinstance(a, ast.Lambda):
+                    self.submitted_lambdas.append((a, self.qual))
+        self.generic_visit(node)
+
+    # -- R3 writes -----------------------------------------------------
+    def _check_store(self, target: ast.AST) -> None:
+        if isinstance(target, ast.Subscript) and _is_stats_name(target.value):
+            key = _const_key(target)
+            if key is not None and key not in self.registry:
+                self._flag("R3", target,
+                           f"stats key {key!r} written but never registered "
+                           "in a stats()/state_gauges() surface or init dict")
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        for t in node.targets:
+            self._check_store(t)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        self._check_store(node.target)
+        self.generic_visit(node)
+
+    # -- collect defs for R4 resolution --------------------------------
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self.defs.setdefault(node.name, node)
+        super().visit_FunctionDef(node)
+
+    visit_AsyncFunctionDef = visit_FunctionDef  # type: ignore[assignment]
+
+
+def _escaped(lines: List[str], *linenos: int) -> bool:
+    return any(0 < n <= len(lines) and ESCAPE in lines[n - 1]
+               for n in linenos)
+
+
+def _blocking_calls(fn: ast.AST) -> List[Tuple[ast.Call, str]]:
+    out = []
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        if not isinstance(f, ast.Attribute):
+            continue
+        if f.attr == "result":
+            out.append((node, ".result()"))
+        elif f.attr == "wait":
+            out.append((node, ".wait()"))
+        elif f.attr == "get":
+            recv = f.value
+            nm = (recv.id if isinstance(recv, ast.Name)
+                  else recv.attr if isinstance(recv, ast.Attribute) else "")
+            if "fut" in nm:
+                out.append((node, f"{nm}.get()"))
+        elif (f.attr == "sleep" and isinstance(f.value, ast.Name)
+              and f.value.id == "time"):
+            out.append((node, "time.sleep()"))
+    return out
+
+
+def _callees(fn: ast.AST) -> Set[str]:
+    names: Set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            f = node.func
+            if isinstance(f, ast.Name):
+                names.add(f.id)
+            elif isinstance(f, ast.Attribute):
+                names.add(f.attr)
+    return names
+
+
+def check_r4(chk: _Checker) -> List[Finding]:
+    findings: List[Finding] = []
+
+    def scan(fn: ast.AST, qual: str, deflineno: int, via: str) -> None:
+        for call, what in _blocking_calls(fn):
+            # the annotation may sit on the call line, the line above it,
+            # or the enclosing def line
+            if _escaped(chk.lines, call.lineno, call.lineno - 1, deflineno):
+                continue
+            findings.append(Finding(
+                "R4", chk.path, call.lineno, qual,
+                f"blocking {what} inside lane-submitted code ({via}); "
+                "restructure as continuation or annotate "
+                "'# lint: allow-blocking'"))
+
+    for name in sorted(chk.submitted):
+        fn = chk.defs.get(name)
+        if fn is None:
+            continue
+        scan(fn, name, fn.lineno, f"submitted fn {name}")
+        for callee in sorted(_callees(fn)):        # one level deep
+            sub = chk.defs.get(callee)
+            if sub is not None and callee != name:
+                scan(sub, callee, sub.lineno,
+                     f"{callee} called from lane-submitted {name}")
+    for lam, qual in chk.submitted_lambdas:
+        scan(lam, qual, lam.lineno, "submitted lambda")
+        # a submitted lambda is a partial-application trampoline: the
+        # named functions it calls get the full one-level treatment
+        for callee in sorted(_callees(lam)):
+            sub = chk.defs.get(callee)
+            if sub is None:
+                continue
+            scan(sub, callee, sub.lineno,
+                 f"{callee} called from lambda submitted in {qual}")
+            for deeper in sorted(_callees(sub)):
+                sub2 = chk.defs.get(deeper)
+                if sub2 is not None and deeper != callee:
+                    scan(sub2, deeper, sub2.lineno,
+                         f"{deeper} called from lane-submitted {callee}")
+    return findings
+
+
+def load_allowlist() -> Set[str]:
+    if not ALLOWLIST.exists():
+        return set()
+    out = set()
+    for raw in ALLOWLIST.read_text().splitlines():
+        line = raw.strip()
+        if line and not line.startswith("#"):
+            out.add(line)
+    return out
+
+
+def run(paths: Optional[List[str]] = None) -> int:
+    files: List[Path] = []
+    for scope in SCOPE:
+        files.extend(sorted((REPO / scope).glob("*.py")))
+    if paths:
+        want = {Path(p).resolve() for p in paths}
+        files = [f for f in files if f.resolve() in want]
+
+    parsed = []
+    registry: Set[str] = set()
+    for f in files:
+        rel = str(f.relative_to(REPO))
+        src = f.read_text()
+        try:
+            tree = ast.parse(src, filename=rel)
+        except SyntaxError as e:
+            print(f"{rel}: syntax error: {e}", file=sys.stderr)
+            return 2
+        reg = _Registry()
+        reg.visit(tree)
+        registry |= reg.keys
+        parsed.append((rel, tree, src.splitlines()))
+
+    findings: List[Finding] = []
+    for rel, tree, lines in parsed:
+        chk = _Checker(rel, registry, lines)
+        chk.visit(tree)
+        findings.extend(chk.findings)
+        findings.extend(check_r4(chk))
+
+    allow = load_allowlist()
+    used: Set[str] = set()
+    shown = []
+    for fd in findings:
+        if fd.key in allow:
+            used.add(fd.key)
+            continue
+        shown.append(fd)
+    for fd in shown:
+        print(fd)
+    stale = allow - used
+    for entry in sorted(stale):
+        print(f"allowlist: stale entry (no longer matches any finding, "
+              f"delete it): {entry}")
+    if shown or stale:
+        print(f"\nlint_runtime: {len(shown)} finding(s), "
+              f"{len(stale)} stale allowlist entr(y/ies)")
+        return 1
+    print(f"lint_runtime: clean ({len(files)} files, "
+          f"{len(registry)} registered stats keys, "
+          f"{len(allow)} allowlisted)")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="*",
+                    help="restrict to these files (default: full scope)")
+    args = ap.parse_args()
+    return run(args.paths or None)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
